@@ -1,0 +1,41 @@
+"""Paper Table 2: SVSS vs AVSS -- accuracy and throughput.
+
+Throughput comes from the analytic device model (iterations x the measured
+block rate of [14], Sec. 4.3); accuracy from the noisy MCAM simulator on
+clustered synthetic episodes of the paper's Omniglot geometry (d=48, CL=32)
+and CUB geometry (d=480, CL=25).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import mean_accuracy
+from repro.core import costmodel
+from repro.core.avss import SearchConfig
+from repro.core.mcam import MCAMConfig
+
+
+def run():
+    rows = []
+    mcam = MCAMConfig(sigma_device=0.1, sigma_read=0.04)
+    for tag, d, cl, dim_kw in [("omniglot", 48, 32, dict(dim=48)),
+                               ("cub", 480, 25, dict(dim=480, n_way=10,
+                                                     episodes=2))]:
+        episodes = dim_kw.pop("episodes", 3)
+        accs, thr = {}, {}
+        for mode in ("svss", "avss"):
+            cfg = SearchConfig("mtmc", cl=cl, mode=mode, mcam=mcam,
+                               use_kernel="ref")
+            t0 = time.perf_counter()
+            accs[mode] = mean_accuracy(cfg, episodes=episodes, **dim_kw)
+            dt = (time.perf_counter() - t0) * 1e6 / episodes
+            thr[mode] = costmodel.throughput_searches_per_s(d, cfg.enc, mode)
+            rows.append((f"table2/{tag}_{mode}", dt,
+                         f"acc={accs[mode]:.3f};"
+                         f"searches_per_s={thr[mode]:.1f}"))
+        speedup = thr["avss"] / thr["svss"]
+        rows.append((f"table2/{tag}_speedup", 0.0,
+                     f"avss_speedup={speedup:.0f}x;"
+                     f"acc_drop={accs['svss'] - accs['avss']:+.3f}"))
+    return rows

@@ -1,0 +1,54 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_us(fn, *args, warmup=1, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def synthetic_episode(key, n_way, k_shot, n_query, dim, sep=2.2, noise=0.9):
+    """Clustered embeddings standing in for controller outputs."""
+    kc, ks, kq = jax.random.split(jax.random.PRNGKey(key), 3)
+    centers = jax.random.normal(kc, (n_way, dim)) * sep
+    s_lab = jnp.repeat(jnp.arange(n_way), k_shot)
+    q_lab = jnp.repeat(jnp.arange(n_way), n_query)
+    s = centers[s_lab] + noise * jax.random.normal(ks, (len(s_lab), dim))
+    q = centers[q_lab] + noise * jax.random.normal(kq, (len(q_lab), dim))
+    return s, s_lab, q, q_lab
+
+
+def quantize_pair(s, q, levels, mode):
+    lo, hi = float(s.min()), float(s.max())
+    to_int = lambda x, lv: jnp.clip(jnp.round(
+        (x - lo) / (hi - lo) * (lv - 1)), 0, lv - 1).astype(jnp.int32)
+    return to_int(s, levels), to_int(q, 4 if mode == "avss" else levels)
+
+
+def search_accuracy(cfg, key=0, n_way=16, k_shot=5, n_query=4, dim=48,
+                    sep=1.1, noise=1.0, **kw):
+    """Harder default geometry than the tests (sep 1.1 / noise 1.0) so the
+    encoding/search-mode accuracy DIFFERENCES are visible."""
+    from repro.core import avss as avss_lib
+    s, s_lab, q, q_lab = synthetic_episode(key, n_way, k_shot, n_query, dim,
+                                           sep=sep, noise=noise, **kw)
+    sv, qv = quantize_pair(s, q, cfg.enc.levels, cfg.mode)
+    res = avss_lib.search_quantized(qv, sv, cfg)
+    pred = avss_lib.predict_1nn(res, s_lab)
+    return float((pred == q_lab).mean())
+
+
+def mean_accuracy(cfg, episodes=5, **kw):
+    return float(np.mean([search_accuracy(cfg, key=k, **kw)
+                          for k in range(episodes)]))

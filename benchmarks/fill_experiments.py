@@ -1,0 +1,103 @@
+"""Render dry-run/perf artifacts into EXPERIMENTS.md placeholder markers."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+MD = "EXPERIMENTS.md"
+
+
+def _load(path):
+    try:
+        return json.load(open(path))
+    except Exception:
+        return None
+
+
+def roofline_rows(pattern):
+    rows = []
+    for f in sorted(glob.glob(pattern)):
+        r = _load(f)
+        if not r:
+            continue
+        if "_mcam" in os.path.basename(f):
+            r = dict(r, shape=r["shape"] + " +MCAM")
+        rows.append(r)
+    return rows
+
+
+def render_table(recs):
+    lines = ["| arch | shape | compute_s | memory_s | collective_s |"
+             " dominant | useful | state GB/dev | peak-temp GB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs = sorted(recs, key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — |"
+                         f" {r['reason']} | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['status']} |"
+                         " | | | | | |")
+            continue
+        rf = r["roofline"]
+        ur = r.get("useful_flops_ratio")
+        mem = r.get("memory_analysis", {})
+        temp = mem.get("temp_size_in_bytes", 0) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4g} |"
+            f" {rf['memory_s']:.4g} | {rf['collective_s']:.4g} |"
+            f" **{rf['dominant']}** |"
+            f" {ur:.3f} |" + f" {r['state_bytes_per_device']/2**30:.2f} |"
+            f" {temp:.1f} |")
+    return "\n".join(lines)
+
+
+def render_analysis(recs):
+    out = []
+    fixes = {
+        "compute": "more MXU-efficient layout (larger microbatch, fused "
+                   "einsums) or simply accept: compute-bound is the goal",
+        "memory": "cut HBM passes: unchunk short-seq attention, selective "
+                  "remat of FFN blocks, bf16 end-to-end residual stream",
+        "collective": "reduce FSDP regather traffic (larger microbatch, "
+                      "weight-gather hoisting), overlap with compute "
+                      "(latency-hiding scheduler), int8 cross-pod grads",
+    }
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        mf = r.get("model_flops_total", 0)
+        out.append(
+            f"* **{r['arch']} / {r['shape']}** — dominant: {rf['dominant']}"
+            f" ({rf['bound_s']:.3g}s vs compute {rf['compute_s']:.3g}s);"
+            f" MODEL_FLOPS={mf:.3g},"
+            f" useful ratio {r.get('useful_flops_ratio') or 0:.3f}."
+            f" To move it: {fixes[rf['dominant']]}.")
+    return "\n".join(out)
+
+
+def replace_block(text, marker, content):
+    tag = f"<!-- {marker} -->"
+    if tag not in text:
+        return text
+    return text.replace(tag, content)
+
+
+def main():
+    text = open(MD).read()
+    single = [r for r in roofline_rows("results/dryrun/*_single*.json")]
+    multi = [r for r in roofline_rows("results/dryrun/*_multi.json")]
+    text = replace_block(text, "ROOFLINE_TABLE", render_table(single))
+    text = replace_block(text, "ROOFLINE_TABLE_MULTI", render_table(multi))
+    text = replace_block(text, "ROOFLINE_ANALYSIS", render_analysis(single))
+    open(MD, "w").write(text)
+    print(f"filled EXPERIMENTS.md: {len(single)} single, {len(multi)} multi")
+
+
+if __name__ == "__main__":
+    main()

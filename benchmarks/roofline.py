@@ -1,0 +1,71 @@
+"""Roofline table from the dry-run sweep artifacts (results/dryrun/*.json).
+
+For every (arch x shape x mesh) cell: the three terms
+    compute_s    = HLO_FLOPs/device / 197 TFLOP/s        (bf16, v5e)
+    memory_s     = HLO_bytes/device / 819 GB/s
+    collective_s = collective_bytes/device / 50 GB/s
+(trip-count-corrected, see repro/launch/dryrun.py), the dominant term, the
+MODEL_FLOPS/HLO_FLOPs usefulness ratio, and per-device state bytes.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(results_dir="results/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        try:
+            recs.append(json.load(open(f)))
+        except Exception:
+            pass
+    return recs
+
+
+def table(recs):
+    lines = ["| arch | shape | mesh | compute_s | memory_s | collective_s |"
+             " dominant | useful | state GB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | -"
+                         f" | - | {r['reason']} | - | - |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+                         f" {r['status']} | | | | | |")
+            continue
+        rf = r["roofline"]
+        ur = r.get("useful_flops_ratio")
+        ur_s = f"{ur:.3f}" if ur is not None else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+            f" {rf['compute_s']:.4g} | {rf['memory_s']:.4g} |"
+            f" {rf['collective_s']:.4g} | {rf['dominant']} | {ur_s} |"
+            f" {r['state_bytes_per_device']/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def run():
+    recs = load_records()
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        rows.append((f"roofline/{r['arch']}_{r['shape']}_{r['mesh']}",
+                     rf["bound_s"] * 1e6,
+                     f"dom={rf['dominant']};compute={rf['compute_s']:.3g};"
+                     f"mem={rf['memory_s']:.3g};coll={rf['collective_s']:.3g};"
+                     f"useful={r.get('useful_flops_ratio') or 0:.3f}"))
+    if not rows:
+        rows.append(("roofline/none", 0.0,
+                     "run benchmarks.dryrun_sweep first"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(table(load_records()))

@@ -1,0 +1,56 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig9,...]
+
+Suites:
+  table1   encoding rules (bench_encodings)
+  fig3_5   mismatch-level distributions B4E vs MTMC (bench_mismatch)
+  table2   SVSS vs AVSS accuracy + throughput (bench_avss)
+  fig9     energy-accuracy Pareto fronts (bench_pareto)
+  kernel   Pallas kernels + two-phase recall (bench_kernels)
+  roofline dry-run derived roofline terms (benchmarks.roofline; needs the
+           dryrun sweep artifacts under results/dryrun)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+SUITES = {
+    "table1": "benchmarks.bench_encodings",
+    "fig3_5": "benchmarks.bench_mismatch",
+    "table2": "benchmarks.bench_avss",
+    "fig9": "benchmarks.bench_pareto",
+    "kernel": "benchmarks.bench_kernels",
+    "roofline": "benchmarks.roofline",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+    print("name,us_per_call,derived")
+    failed = []
+    import importlib
+    for key, modname in SUITES.items():
+        if key not in only:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception as e:  # keep the harness going; report at the end
+            failed.append((key, repr(e)))
+            print(f"{key}/ERROR,0.0,{e!r}")
+    if failed:
+        print(f"# {len(failed)} suite(s) failed: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

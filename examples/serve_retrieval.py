@@ -1,0 +1,88 @@
+"""End-to-end SERVING driver (the paper's kind: efficient retrieval):
+a small LM decodes batched requests with an MCAM-backed kNN memory fused
+into the logits -- the production `serve_step` the 40-cell dry-run lowers,
+executed for real at reduced scale.
+
+    PYTHONPATH=src python examples/serve_retrieval.py \
+        [--arch starcoder2-3b] [--batch 4] [--steps 12] [--lam 0.3]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import load_config
+from repro.core import memory as mem
+from repro.core.avss import SearchConfig
+from repro.core.memory import MemoryConfig
+from repro.launch import steps as steps_lib
+from repro.models import transformer as tfm
+from repro.models.sharding import Rules
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--lam", type=float, default=0.3)
+    args = ap.parse_args()
+
+    cfg = load_config(args.arch, smoke=True)
+    rules = Rules(batch=(), fsdp=(), tensor=(), expert=())
+    key = jax.random.PRNGKey(0)
+    params = tfm.init(key, cfg)
+    B, P = args.batch, args.prompt_len
+    max_seq = P + args.steps
+
+    # --- the MCAM memory: token-labelled embedding store (kNN-LM head) ---
+    mem_cfg = MemoryConfig(
+        capacity=1024, dim=min(48, cfg.d_model),
+        search=SearchConfig("mtmc", cl=8, mode="avss", use_kernel="ref"))
+    mstate = mem.init_memory(mem_cfg)
+    demo_vecs = jax.random.normal(jax.random.PRNGKey(7), (256, mem_cfg.dim))
+    demo_tok = jax.random.randint(jax.random.PRNGKey(8), (256,), 0,
+                                  cfg.vocab_size)
+    mstate = mem.calibrate(mstate, demo_vecs, mem_cfg)
+    mstate = mem.write(mstate, demo_vecs, demo_tok, mem_cfg)
+
+    serve_step = steps_lib.make_serve_step_with_mcam(cfg, rules, mem_cfg,
+                                                     lam=args.lam)
+    jstep = jax.jit(serve_step)
+    plain_step = jax.jit(steps_lib.make_serve_step(cfg, rules))
+
+    # --- batched requests: prefill then decode ---
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+    caches = tfm.init_cache(cfg, B, max_seq)
+    print(f"prefilling {B} requests of {P} tokens ...")
+    t0 = time.time()
+    for t in range(P):  # teacher-forced prefill through the decode path
+        logits, caches = plain_step(params, caches,
+                                    {"tokens": prompts[:, t:t + 1]},
+                                    jnp.int32(t))
+    print(f"  prefill {time.time()-t0:.1f}s")
+
+    tok = jnp.argmax(logits[:, 0], -1)[:, None]
+    outs = [tok]
+    t0 = time.time()
+    for i in range(args.steps):
+        logits, caches = jstep(params, caches, {"tokens": tok},
+                               jnp.int32(P + i), mstate)
+        tok = jnp.argmax(logits[:, 0], -1)[:, None]
+        outs.append(tok)
+    dt = time.time() - t0
+    gen = np.asarray(jnp.concatenate(outs, 1))
+    print(f"decoded {args.steps} steps x {B} requests in {dt:.1f}s "
+          f"({args.steps * B / dt:.1f} tok/s on CPU, MCAM-fused logits)")
+    for b in range(B):
+        print(f"  req{b}: {gen[b].tolist()}")
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    print("OK: serve_step_with_mcam end-to-end")
+
+
+if __name__ == "__main__":
+    main()

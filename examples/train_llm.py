@@ -1,0 +1,16 @@
+"""End-to-end LM training driver on synthetic data (reduced config on CPU;
+the identical code path the dry-run proves out at 405B/671B scale).
+
+    PYTHONPATH=src python examples/train_llm.py --arch starcoder2-3b \
+        --steps 100 --batch 8 --seq 128
+
+Uses the full production substrate: sharded train step (grad accumulation,
+clipping, in-step anomaly skip), AdamW, async atomic checkpoints, preemption
+handler, resumable deterministic data. Try Ctrl-C mid-run then re-run with
+--resume: training continues from the checkpoint, replaying no data.
+"""
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Paper-faithful CUB setup: ResNet12 controller, 480-d embeddings,
+50-way 5-shot, MTMC CL=25 -> ~125K NAND strings (paper Sec. 4.1)."""
+from repro.configs.omniglot_conv4 import FSLConfig
+
+from repro.core.avss import SearchConfig
+from repro.core.mcam import MCAMConfig
+
+
+def get_config() -> FSLConfig:
+    return FSLConfig(
+        name="cub-resnet12", controller="resnet12", embed_dim=480,
+        image_size=84, channels=3, n_way=50, k_shot=5,
+        n_train_classes=100, n_test_classes=50, cl=25,
+        search=SearchConfig(encoding="mtmc", cl=25, mode="avss",
+                            mcam=MCAMConfig()),
+    )
+
+
+def get_smoke_config() -> FSLConfig:
+    return FSLConfig(
+        name="cub-resnet12-smoke", controller="resnet12", embed_dim=32,
+        image_size=24, channels=3, n_way=6, k_shot=2,
+        n_train_classes=20, n_test_classes=8, cl=6,
+        search=SearchConfig(encoding="mtmc", cl=6, mode="avss",
+                            mcam=MCAMConfig()),
+    )

@@ -1,0 +1,210 @@
+"""Symmetric (SVSS) and Asymmetric (AVSS) vector similarity search on MCAM.
+
+Storage layout (paper Fig. 4, generalised): a support vector with d dimensions
+encoded into L code words per dimension occupies a grid of NAND strings
+
+    (n_seg, L) strings,   n_seg = ceil(d / string_len)
+
+where string (seg, c) holds the c-th code word of the ``string_len`` dimensions
+in segment ``seg``. Code-word significance is therefore uniform within a
+string, realising Eq. (2)'s weighted accumulation with one weight per string.
+
+* SVSS: the query is encoded identically, and every string requires its own
+  word-line cycle  ->  iterations = L * n_seg.
+* AVSS: the query keeps ONE 4-level word per dimension; the same word-line
+  setting is shared by all L strings of a segment, which are sensed in
+  parallel  ->  iterations = n_seg.  (32x fewer for Omniglot's CL=32,
+  25x for CUB's CL=25 -- paper Table 2.)
+
+The search result per (query, support) is the accumulated, weighted SA vote
+count over all strings; prediction is 1-NN on votes (vote ties broken by the
+ideal digital distance) or per-class vote sums.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mcam as mcam_lib
+from repro.core.encodings import Encoding, make_encoding
+from repro.core.mcam import MCAMConfig
+
+Mode = str  # 'svss' | 'avss'
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    """End-to-end VSS configuration."""
+
+    encoding: str = "mtmc"
+    cl: int = 8
+    mode: Mode = "avss"
+    mcam: MCAMConfig = dataclasses.field(default_factory=MCAMConfig)
+    noisy: bool = True          # device/read noise on (paper-faithful)
+    use_kernel: str = "auto"    # 'ref' | 'pallas' | 'mxu' | 'auto'
+    query_chunk: int = 8        # reference-path chunking over queries
+
+    @property
+    def enc(self) -> Encoding:
+        return make_encoding(self.encoding, self.cl)
+
+
+def n_segments(d: int, string_len: int = mcam_lib.DEFAULT_STRING_LEN) -> int:
+    return math.ceil(d / string_len)
+
+
+def search_iterations(d: int, enc: Encoding, mode: Mode,
+                      string_len: int = mcam_lib.DEFAULT_STRING_LEN) -> int:
+    """Word-line cycles per query (paper Sec. 3.2)."""
+    seg = n_segments(d, string_len)
+    return seg if mode == "avss" else seg * enc.length
+
+
+def strings_per_support(d: int, enc: Encoding,
+                        string_len: int = mcam_lib.DEFAULT_STRING_LEN) -> int:
+    return n_segments(d, string_len) * enc.length
+
+
+# ---------------------------------------------------------------------------
+# Layout helpers.
+# ---------------------------------------------------------------------------
+
+
+def _segment_dims(x: jax.Array, string_len: int) -> jax.Array:
+    """(..., d) -> (..., n_seg, string_len), zero-padded."""
+    d = x.shape[-1]
+    seg = n_segments(d, string_len)
+    pad = seg * string_len - d
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x.reshape(*x.shape[:-1], seg, string_len)
+
+
+def layout_support(values: jax.Array, enc: Encoding,
+                   string_len: int = mcam_lib.DEFAULT_STRING_LEN) -> jax.Array:
+    """Quantized support values (N, d) -> string grid (N, n_seg, L, string_len).
+
+    Padding dimensions store code 0 and are always searched with query word 0,
+    contributing zero mismatch (and rho**0 resistance, as real pass cells do).
+    """
+    codes = enc.encode(values)                       # (N, d, L)
+    codes = jnp.moveaxis(codes, -1, -2)              # (N, L, d)
+    codes = _segment_dims(codes, string_len)         # (N, L, seg, sl)
+    return jnp.moveaxis(codes, -3, -2)               # (N, seg, L, sl)
+
+
+def layout_query(values: jax.Array, enc: Encoding, mode: Mode,
+                 string_len: int = mcam_lib.DEFAULT_STRING_LEN) -> jax.Array:
+    """Quantized query (B, d) -> word-line grid (B, n_seg, L_q, string_len).
+
+    AVSS: L_q == 1 (values already in [0, 4)); SVSS: L_q == enc.length.
+    """
+    if mode == "avss":
+        return _segment_dims(values, string_len)[..., :, None, :]
+    return layout_support(values, enc, string_len)
+
+
+# ---------------------------------------------------------------------------
+# Reference search (pure jnp; the Pallas kernels mirror this bit-exactly).
+# ---------------------------------------------------------------------------
+
+
+def _search_one_query(q_grid: jax.Array, s_grid: jax.Array, qidx: jax.Array,
+                      weights: jax.Array, cfg: SearchConfig,
+                      thresholds: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """q_grid (seg, Lq, sl); s_grid (N, seg, L, sl) -> votes (N,), dist (N,)."""
+    mm = jnp.abs(q_grid[None].astype(jnp.int32) - s_grid.astype(jnp.int32))
+    mm = mm.astype(jnp.float32)                      # (N, seg, L, sl)
+    n, seg, L, sl = mm.shape
+    if cfg.noisy:
+        string_id = (jnp.arange(n, dtype=jnp.uint32)[:, None, None] * (seg * L)
+                     + jnp.arange(seg, dtype=jnp.uint32)[None, :, None] * L
+                     + jnp.arange(L, dtype=jnp.uint32)[None, None, :])
+        cur = mcam_lib.string_current(mm, cfg.mcam, noise_idx=(qidx, string_id))
+    else:
+        cur = mcam_lib.string_current(mm, cfg.mcam)
+    votes = mcam_lib.sa_votes(cur, cfg.mcam, thresholds)  # (N, seg, L)
+    votes = (votes * weights[None, None, :]).sum((-1, -2))
+    dist = (mm.sum(-1) * weights[None, None, :]).sum((-1, -2))
+    return votes, dist
+
+
+def search_quantized(q_values: jax.Array, s_values: jax.Array,
+                     cfg: SearchConfig) -> dict[str, jax.Array]:
+    """Run the full MCAM search.
+
+    q_values: (B, d) ints -- in [0, 4) for AVSS, [0, enc.levels) for SVSS.
+    s_values: (N, d) ints in [0, enc.levels).
+    Returns dict with votes (B, N), dist (B, N) (ideal digital distance) and
+    iterations (python int).
+    """
+    enc = cfg.enc
+    sl = cfg.mcam.string_len
+    d = q_values.shape[-1]
+    s_grid = layout_support(s_values, enc, sl)
+    q_grid = layout_query(q_values, enc, cfg.mode, sl)
+    weights = enc.weights_array()
+    thresholds = jnp.asarray(cfg.mcam.thresholds())
+
+    if cfg.use_kernel in ("pallas", "mxu") or (
+            cfg.use_kernel == "auto" and _kernel_available()):
+        from repro.kernels import ops as kernel_ops  # local import: optional dep
+        votes, dist = kernel_ops.mcam_search(
+            q_grid, s_grid, weights, cfg, thresholds)
+    else:
+        fn = partial(_search_one_query, weights=weights, cfg=cfg,
+                     thresholds=thresholds)
+        qidx = jnp.arange(q_grid.shape[0], dtype=jnp.uint32)
+        votes, dist = jax.lax.map(
+            lambda args: fn(args[0], s_grid, args[1]), (q_grid, qidx),
+            batch_size=min(cfg.query_chunk, q_grid.shape[0]))
+
+    return {
+        "votes": votes,
+        "dist": dist,
+        "iterations": search_iterations(d, enc, cfg.mode, sl),
+    }
+
+
+def _kernel_available() -> bool:
+    try:
+        from repro.kernels import ops  # noqa: F401
+        return True
+    except Exception:
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Prediction heads.
+# ---------------------------------------------------------------------------
+
+
+def score_supports(result: dict[str, jax.Array]) -> jax.Array:
+    """Votes with infinitesimal ideal-distance tie-breaking. (B, N)."""
+    return result["votes"] - 1e-6 * result["dist"]
+
+
+def predict_1nn(result: dict[str, jax.Array], labels: jax.Array) -> jax.Array:
+    """Label of the most-similar support (the paper's retrieval rule)."""
+    return labels[jnp.argmax(score_supports(result), axis=-1)]
+
+
+def class_scores(result: dict[str, jax.Array], labels: jax.Array,
+                 n_classes: int) -> jax.Array:
+    """Per-class vote sums (B, n_classes) -- used by HAT's CE loss."""
+    onehot = jax.nn.one_hot(labels, n_classes, dtype=result["votes"].dtype)
+    return score_supports(result) @ onehot
+
+
+def predict_class_vote(result, labels, n_classes) -> jax.Array:
+    return jnp.argmax(class_scores(result, labels, n_classes), axis=-1)
+
+
+def accuracy(pred: jax.Array, target: jax.Array) -> jax.Array:
+    return (pred == target).mean()

@@ -1,0 +1,195 @@
+"""Encoding schemes for MCAM vector similarity search.
+
+Implements the paper's proposed Multi-bit Thermometer Code (MTMC) plus every
+baseline it compares against:
+
+  * MTMC  -- 4-ary thermometer code (paper Sec. 3.1, Table 1).
+  * B4E   -- base-4 bit slicing (Hsu et al. [18]).
+  * B4WE  -- base-4 weighted encoding: B4E with word i repeated 4^(i-1) times,
+             MSB repeated most (Kim et al. [19]).
+  * SRE   -- simple repetition encoding: the 4-level value repeated r times
+             (Li et al. [11], SAPIENS).
+
+Every code word is an integer in [0, 3] (one MLC unit cell = 4 states).
+An ``Encoding`` bundles the mapping value -> code words, the per-word
+accumulation weights (Eq. 2 of the paper), and the number of representable
+quantization levels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CELL_STATES = 4  # MLC flash: 4 programmable states per unit cell.
+MAX_MISMATCH = CELL_STATES - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Encoding:
+    """A value -> code-word mapping for MCAM storage.
+
+    Attributes:
+      name: scheme identifier.
+      cl: the scheme's code-word-length parameter (see paper Table 1).
+      length: total number of unit cells per dimension after encoding
+        (== cl for MTMC/B4E, r for SRE, (4^cl-1)/3 for B4WE).
+      levels: number of representable quantization levels.
+      weights: (length,) per-word accumulation weight s_i of Eq. (2).
+    """
+
+    name: str
+    cl: int
+    length: int
+    levels: int
+    weights: tuple
+
+    def encode(self, values: jax.Array) -> jax.Array:
+        """(...,) ints in [0, levels) -> (..., length) code words in [0, 3]."""
+        return _ENCODERS[self.name](values, self.cl)
+
+    def decode(self, codes: jax.Array) -> jax.Array:
+        """(..., length) code words -> (...,) values. Inverse of encode."""
+        w = jnp.asarray(self.weights, dtype=codes.dtype)
+        if self.name == "mtmc":
+            return codes.sum(-1)
+        if self.name == "sre":
+            # All words equal; integer-average to be robust to perturbation.
+            return jnp.round(codes.mean(-1)).astype(codes.dtype)
+        # b4e / b4we: weighted positional sum; b4we repeats need de-duplication
+        # by dividing each repeated group's weight by its repeat count --
+        # folded into `weights` already being per-word positional values.
+        if self.name == "b4e":
+            return (codes * w).sum(-1)
+        # b4we: each significance j appears 4^j times with weight 4^j each;
+        # recover digit as mean of its group then positional-sum.
+        vals = jnp.zeros(codes.shape[:-1], dtype=codes.dtype)
+        idx = 0
+        for j in reversed(range(self.cl)):  # MSB first in storage order
+            rep = CELL_STATES**j
+            digit = jnp.round(codes[..., idx : idx + rep].mean(-1))
+            vals = vals + digit.astype(codes.dtype) * (CELL_STATES**j)
+            idx += rep
+        return vals
+
+    def weights_array(self, dtype=jnp.float32) -> jax.Array:
+        return jnp.asarray(self.weights, dtype=dtype)
+
+
+def _mtmc_encode(values: jax.Array, cl: int) -> jax.Array:
+    """Multi-bit thermometer code (paper Sec. 3.1).
+
+    value m -> first cl-n words = x, last n words = x+1 with
+    x = m // cl, n = m mod cl. Range [0, 3*cl].
+    """
+    values = jnp.asarray(values)
+    x = values // cl
+    n = values % cl
+    w = jnp.arange(cl, dtype=values.dtype)
+    codes = x[..., None] + (w >= (cl - n)[..., None]).astype(values.dtype)
+    return jnp.clip(codes, 0, MAX_MISMATCH)
+
+
+def _b4e_encode(values: jax.Array, cl: int) -> jax.Array:
+    """Base-4 encoding, MSB first (value 7, cl=2 -> [1, 3])."""
+    values = jnp.asarray(values)
+    shifts = np.array([CELL_STATES ** (cl - 1 - i) for i in range(cl)])
+    shifts = jnp.asarray(shifts, dtype=values.dtype)
+    return (values[..., None] // shifts) % CELL_STATES
+
+
+def _sre_encode(values: jax.Array, r: int) -> jax.Array:
+    """Simple repetition: 4-level value repeated r times."""
+    values = jnp.asarray(values)
+    return jnp.repeat(values[..., None], r, axis=-1)
+
+
+def _b4we_encode(values: jax.Array, cl: int) -> jax.Array:
+    """Base-4 weighted encoding: B4E word of significance j repeated 4^j
+    times (MSB repeated most), realising Eq. (2) weights by duplication."""
+    b4e = _b4e_encode(values, cl)  # MSB first
+    parts = []
+    for i in range(cl):  # storage order: MSB group first
+        j = cl - 1 - i  # significance
+        parts.append(jnp.repeat(b4e[..., i : i + 1], CELL_STATES**j, axis=-1))
+    return jnp.concatenate(parts, axis=-1)
+
+
+_ENCODERS = {
+    "mtmc": _mtmc_encode,
+    "b4e": _b4e_encode,
+    "sre": _sre_encode,
+    "b4we": _b4we_encode,
+}
+
+
+def make_encoding(name: str, cl: int) -> Encoding:
+    """Factory. `cl` is the code-word-length parameter from the paper:
+    word count for mtmc/b4e, repeat count for sre, base word count for b4we.
+    """
+    name = name.lower()
+    if name == "mtmc":
+        return Encoding(name, cl, cl, 3 * cl + 1, tuple([1.0] * cl))
+    if name == "b4e":
+        w = tuple(float(CELL_STATES ** (cl - 1 - i)) for i in range(cl))
+        return Encoding(name, cl, cl, CELL_STATES**cl, w)
+    if name == "sre":
+        return Encoding(name, cl, cl, CELL_STATES, tuple([1.0] * cl))
+    if name == "b4we":
+        length = (CELL_STATES**cl - 1) // 3
+        w = []
+        for i in range(cl):
+            j = cl - 1 - i
+            w.extend([1.0] * (CELL_STATES**j))
+        return Encoding(name, cl, length, CELL_STATES**cl, tuple(w))
+    raise ValueError(f"unknown encoding {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# AVSS lookup tables.
+#
+# Under AVSS the query is quantized to 4 levels (one code word per dimension)
+# and compared against ALL code words of the support in that dimension. For a
+# support value v encoded as words code_c(v) with weights w_c, the
+# per-dimension contributions are a pure function of (q, v):
+#
+#   LUT_sum[q, v] = sum_c w_c * |q - code_c(v)|       (accumulated similarity)
+#   LUT_wrd[c][q, v] = |q - code_c(v)|                (per-string mismatch)
+#
+# For MTMC this collapses to the exact identity LUT_sum[q, v] = |cl*q - v|
+# (proved in tests), which is what makes the MXU formulation possible.
+# ---------------------------------------------------------------------------
+
+
+def avss_word_luts(enc: Encoding) -> np.ndarray:
+    """(length, 4, levels) int table: |q - code_c(v)| per word c.
+
+    Evaluated eagerly even under an active jit trace (the table is a
+    compile-time constant of the encoding, not data)."""
+    with jax.ensure_compile_time_eval():
+        v = np.arange(enc.levels)
+        codes = np.asarray(jax.device_get(enc.encode(jnp.asarray(v))))
+    q = np.arange(CELL_STATES)[:, None]  # (4, 1)
+    # (length, 4, levels)
+    return np.abs(q[None] - codes.T[:, None, :]).astype(np.int32)
+
+
+def avss_sum_lut(enc: Encoding) -> np.ndarray:
+    """(4, levels) float: weighted summed mismatch per (query word, value)."""
+    luts = avss_word_luts(enc).astype(np.float64)  # (L, 4, levels)
+    w = np.asarray(enc.weights, dtype=np.float64)[:, None, None]
+    return (luts * w).sum(0).astype(np.float32)
+
+
+def avss_max_lut(enc: Encoding) -> np.ndarray:
+    """(4, levels) int: max per-word mismatch per (query word, value)."""
+    return avss_word_luts(enc).max(0).astype(np.int32)
+
+
+def svss_pair_mismatch(enc: Encoding, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Per-word |code(a) - code(b)| for symmetric search. (..., length)."""
+    return jnp.abs(enc.encode(a) - enc.encode(b))

@@ -1,0 +1,161 @@
+"""Behavioural model of the 3D-NAND multi-bit CAM (MCAM) of Tseng et al. [14].
+
+The MCAM stores vectors on NAND strings of ``string_len`` (default 24) unit
+cells; a search applies the query on shared word lines and the per-string
+current encodes similarity. Physics captured here (paper Fig. 2):
+
+* Each unit cell produces a mismatch level m in {0, 1, 2, 3} between the
+  searched word and the stored word.
+* The string is a SERIES connection, so we model each cell as a resistance
+  growing exponentially with its mismatch level, R(m) = rho**m, and the
+  string current as I = string_len / sum_c rho**(m_c). This reproduces both
+  measured behaviours in Fig. 2(b)/(c):
+    - current decreases monotonically with the summed mismatch, and
+    - for a fixed summed mismatch, a single high-mismatch cell dominates
+      (the "bottleneck effect": mismatch-3 strings sink far below
+      mismatch-1 strings of equal total mismatch).
+* Device variation perturbs the effective mismatch exponent with Gaussian
+  noise (sigma_device), and the sense path adds multiplicative read noise
+  (sigma_read) -- the Gaussian noise model the paper adopts from CAMASim [15].
+* A sense amplifier compares the string current against ``n_thresholds``
+  reference levels; the per-string vote is the count of thresholds exceeded.
+
+Noise is generated with a counter-based hash (deterministic given a seed and
+the absolute (query, string, cell) coordinates) so that the Pallas kernels and
+the pure-jnp reference produce bit-identical results, and searches are
+reproducible across shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encodings import MAX_MISMATCH
+
+DEFAULT_STRING_LEN = 24
+
+
+@dataclasses.dataclass(frozen=True)
+class MCAMConfig:
+    """Hardware parameters of the simulated MCAM block."""
+
+    string_len: int = DEFAULT_STRING_LEN
+    rho: float = 8.0            # per-mismatch-level series resistance ratio
+    sigma_device: float = 0.12  # stddev of per-cell mismatch-exponent noise
+    sigma_read: float = 0.04    # stddev of multiplicative current read noise
+    n_thresholds: int = 8       # SA reference levels
+    max_strings: int = 131072   # 128K strings per block [14]
+    seed: int = 0
+
+    def thresholds(self) -> np.ndarray:
+        """SA reference currents. Calibrated to ideal currents of strings with
+        s uniformly-spread single-level mismatches, s geometrically spaced --
+        dense resolution near perfect matches where decisions happen."""
+        smax = 1.5 * self.string_len
+        s = np.unique(np.round(np.geomspace(1.0, smax, self.n_thresholds)))
+        while len(s) < self.n_thresholds:  # pad with linear extras
+            s = np.unique(np.concatenate([s, s[-1:] + np.arange(1, 1 + self.n_thresholds - len(s))]))
+        s = s[: self.n_thresholds].astype(np.float64)
+        i_ideal = self.string_len / ((self.string_len - s) + s * self.rho)
+        return np.sort(i_ideal).astype(np.float32)  # ascending
+
+
+# ---------------------------------------------------------------------------
+# Counter-based deterministic noise (shared by kernels and reference).
+# ---------------------------------------------------------------------------
+
+_M1 = np.uint32(0x7FEB352D)
+_M2 = np.uint32(0x846CA68B)
+
+
+def _mix(x: jax.Array) -> jax.Array:
+    """murmur3-style 32-bit finalizer (vectorised, uint32 in/out)."""
+    x = x ^ (x >> 16)
+    x = x * _M1
+    x = x ^ (x >> 15)
+    x = x * _M2
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_uniform(*idx: jax.Array, seed: int) -> jax.Array:
+    """Deterministic uniform(0,1) from integer coordinates (broadcasting)."""
+    h = jnp.uint32(seed) * jnp.uint32(0x9E3779B9) + jnp.uint32(0x85EBCA6B)
+    for k, i in enumerate(idx):
+        h = _mix(h ^ (jnp.asarray(i).astype(jnp.uint32) + jnp.uint32(k + 1) * jnp.uint32(0x9E3779B9)))
+    return (h.astype(jnp.float32) + 0.5) * jnp.float32(1.0 / 4294967296.0)
+
+
+def hash_normal(*idx: jax.Array, seed: int) -> jax.Array:
+    """Deterministic standard normal via Box-Muller over two hash streams."""
+    u1 = hash_uniform(*idx, seed=seed)
+    u2 = hash_uniform(*idx, seed=seed + 0x5BD1)
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    return r * jnp.cos(2.0 * jnp.float32(np.pi) * u2)
+
+
+# ---------------------------------------------------------------------------
+# String current + sense amplifier.
+# ---------------------------------------------------------------------------
+
+
+def string_resistance(cell_mismatch: jax.Array, cfg: MCAMConfig,
+                      device_noise: jax.Array | None = None) -> jax.Array:
+    """Sum of per-cell series resistances; reduces the trailing axis.
+
+    cell_mismatch: (..., cells) float or int mismatch levels in [0, 3].
+    device_noise:  optional (..., cells) standard-normal perturbations.
+    """
+    m = cell_mismatch.astype(jnp.float32)
+    if device_noise is not None:
+        m = m + cfg.sigma_device * device_noise
+        m = jnp.clip(m, 0.0, float(MAX_MISMATCH))
+    return jnp.power(jnp.float32(cfg.rho), m).sum(-1)
+
+
+def current_from_resistance(r_sum: jax.Array, n_cells: int, cfg: MCAMConfig,
+                            read_noise: jax.Array | None = None) -> jax.Array:
+    """I = n_cells / sum_R, normalised so a perfect match reads 1.0."""
+    i = jnp.float32(n_cells) / r_sum
+    if read_noise is not None:
+        i = i * (1.0 + cfg.sigma_read * read_noise)
+    return i
+
+
+def string_current(cell_mismatch: jax.Array, cfg: MCAMConfig, *,
+                   noise_idx: tuple[jax.Array, ...] | None = None) -> jax.Array:
+    """Full noisy current for strings of cells; reduces the trailing axis.
+
+    noise_idx: integer coordinate arrays broadcastable to
+      cell_mismatch.shape[:-1]; when given, deterministic device/read noise is
+      derived from them (plus the cell index for device noise).
+    """
+    n_cells = cell_mismatch.shape[-1]
+    if noise_idx is None:
+        r = string_resistance(cell_mismatch, cfg)
+        return current_from_resistance(r, n_cells, cfg)
+    cell = jnp.arange(n_cells, dtype=jnp.uint32)
+    bidx = tuple(jnp.asarray(i)[..., None] for i in noise_idx)
+    dn = hash_normal(*bidx, cell, seed=cfg.seed)
+    rn = hash_normal(*noise_idx, seed=cfg.seed + 0x2C1B)
+    r = string_resistance(cell_mismatch, cfg, device_noise=dn)
+    return current_from_resistance(r, n_cells, cfg, read_noise=rn)
+
+
+def sa_votes(currents: jax.Array, cfg: MCAMConfig,
+             thresholds: jax.Array | None = None) -> jax.Array:
+    """Sense-amplifier voting: count of reference levels the current exceeds."""
+    th = jnp.asarray(cfg.thresholds() if thresholds is None else thresholds)
+    return (currents[..., None] > th).sum(-1).astype(jnp.float32)
+
+
+def ideal_current(total_mismatch: jax.Array, cfg: MCAMConfig) -> jax.Array:
+    """Noise-free current of a string whose mismatch is spread one level per
+    cell (the best case for a given total) -- used for SA calibration."""
+    s = total_mismatch.astype(jnp.float32)
+    n = jnp.float32(cfg.string_len)
+    return n / ((n - s) + s * cfg.rho)

@@ -1,0 +1,162 @@
+"""MANN external memory backed by the simulated MCAM (sharded, first-class).
+
+This is the module any backbone in the framework attaches to for many-class
+few-shot heads / kNN memories: `write` stores controller embeddings (quantized
++ MTMC-projected at write time, as real MCAM programming would), `search` runs
+AVSS and returns vote scores, and `distributed_search` shards the store across
+an arbitrary mesh axis set with a local-top-k -> all-gather -> global-top-k
+reduction (the block-parallel search a multi-chip MCAM deployment performs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import avss as avss_lib
+from repro.core.avss import SearchConfig
+from repro.core.quantization import QuantSpec, fake_quant
+from repro.kernels import ops as kernel_ops
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryConfig:
+    capacity: int = 2048
+    dim: int = 48
+    search: SearchConfig = dataclasses.field(default_factory=SearchConfig)
+    clip_std: float = 2.5
+
+
+def init_memory(cfg: MemoryConfig) -> dict:
+    enc = cfg.search.enc
+    return {
+        "values": jnp.zeros((cfg.capacity, cfg.dim), jnp.int32),
+        "proj": jnp.zeros((cfg.capacity, 4 * cfg.dim), jnp.bfloat16),
+        "labels": jnp.full((cfg.capacity,), -1, jnp.int32),
+        "size": jnp.zeros((), jnp.int32),
+        "lo": jnp.zeros((), jnp.float32),
+        "hi": jnp.ones((), jnp.float32),
+    }
+
+
+def calibrate(state: dict, vectors: jax.Array, cfg: MemoryConfig) -> dict:
+    """Set the quantization range from a sample of embeddings (std clipping,
+    paper Sec. 3.3). Must run before the first write."""
+    mu, sd = vectors.mean(), vectors.std() + 1e-8
+    return {**state, "lo": mu - cfg.clip_std * sd, "hi": mu + cfg.clip_std * sd}
+
+
+def _quantize(x, levels, lo, hi):
+    scale = (levels - 1) / (hi - lo)
+    q = jnp.round((jnp.clip(x, lo, hi) - lo) * scale)
+    return jnp.clip(q, 0, levels - 1).astype(jnp.int32)
+
+
+def write(state: dict, vectors: jax.Array, labels: jax.Array,
+          cfg: MemoryConfig) -> dict:
+    """Program a batch of support embeddings into the store (ring buffer)."""
+    enc = cfg.search.enc
+    v = _quantize(vectors, enc.levels, state["lo"], state["hi"])
+    proj = kernel_ops.support_projection(v, enc)
+    n = vectors.shape[0]
+    start = state["size"] % cfg.capacity
+    idx = (start + jnp.arange(n)) % cfg.capacity
+    return {
+        **state,
+        "values": state["values"].at[idx].set(v),
+        "proj": state["proj"].at[idx].set(proj),
+        "labels": state["labels"].at[idx].set(labels.astype(jnp.int32)),
+        "size": state["size"] + n,
+    }
+
+
+def quantize_queries(state: dict, queries: jax.Array) -> jax.Array:
+    return _quantize(queries, 4, state["lo"], state["hi"])
+
+
+def search(state: dict, queries: jax.Array, cfg: MemoryConfig,
+           two_phase: bool = False, k: int = 64) -> dict:
+    """AVSS over the whole store. queries: (B, dim) float embeddings."""
+    q = quantize_queries(state, queries)
+    if two_phase:
+        res = kernel_ops.two_phase_search(q, state["values"], cfg.search, k=k)
+        valid = res["indices"] < state["size"]
+        votes = jnp.where(valid, res["votes"], -jnp.inf)
+        labels = jnp.where(valid, state["labels"][res["indices"]], -1)
+        return {**res, "votes": votes, "labels": labels}
+    res = avss_lib.search_quantized(q, state["values"], cfg.search)
+    slot = jnp.arange(cfg.capacity)
+    votes = jnp.where(slot[None, :] < state["size"], res["votes"], -jnp.inf)
+    return {**res, "votes": votes,
+            "labels": jnp.broadcast_to(state["labels"], votes.shape)}
+
+
+def predict(result: dict) -> jax.Array:
+    """1-NN label prediction from a (two-phase or full) search result."""
+    score = result["votes"] - 1e-6 * jnp.where(
+        jnp.isfinite(result["votes"]), result["dist"], 0.0)
+    best = jnp.argmax(score, axis=-1)
+    return jnp.take_along_axis(result["labels"], best[:, None], 1)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Distributed search: store rows sharded over mesh axes.
+# ---------------------------------------------------------------------------
+
+
+def shard_state(state: dict, mesh, axes) -> dict:
+    """NamedSharding the store row-wise over `axes` (e.g. ('data','model'))."""
+    row = jax.sharding.NamedSharding(mesh, P(axes))
+    rep = jax.sharding.NamedSharding(mesh, P())
+    put = lambda x, s: jax.device_put(x, s)
+    return {
+        "values": put(state["values"], row),
+        "proj": put(state["proj"], row),
+        "labels": put(state["labels"], row),
+        "size": put(state["size"], rep),
+        "lo": put(state["lo"], rep),
+        "hi": put(state["hi"], rep),
+    }
+
+
+def distributed_search(state: dict, queries: jax.Array, cfg: MemoryConfig,
+                       mesh, axes=("data", "model"), k: int = 16) -> dict:
+    """Block-parallel AVSS: each shard searches its rows with the MXU LUT
+    kernel-equivalent einsum, local top-k, then a global top-k after
+    all-gathering the (tiny) candidate sets. Collective volume is
+    O(B * k * shards), independent of capacity."""
+    from jax.experimental.shard_map import shard_map
+    enc = cfg.search.enc
+    q = quantize_queries(state, queries)
+    qrows = kernel_ops.query_onehot(q, jnp.float32)        # (B, 4d) replicated
+
+    def local(qr, proj, labels):
+        # proj: (N_loc, 4d); ideal digital distance on local rows
+        dist = qr @ proj.astype(jnp.float32).T             # (B, N_loc)
+        dist = jnp.where(labels[None, :] < 0, jnp.inf, dist)  # empty slots
+        kk = min(k, proj.shape[0])
+        neg, idx = jax.lax.top_k(-dist, kk)
+        cand_lab = labels[idx]                             # (B, kk)
+        # gather candidates from every shard
+        ax = axes[0] if len(axes) == 1 else axes
+        d_all = jax.lax.all_gather(-neg, ax, tiled=False)  # (S, B, kk) or nested
+        l_all = jax.lax.all_gather(cand_lab, ax, tiled=False)
+        d_all = d_all.reshape(-1, *neg.shape)              # (S, B, kk)
+        l_all = l_all.reshape(-1, *neg.shape)
+        d_flat = jnp.moveaxis(d_all, 0, 1).reshape(neg.shape[0], -1)
+        l_flat = jnp.moveaxis(l_all, 0, 1).reshape(neg.shape[0], -1)
+        best = jnp.argsort(d_flat, axis=-1)[:, :k]
+        return (jnp.take_along_axis(d_flat, best, 1),
+                jnp.take_along_axis(l_flat, best, 1))
+
+    dist, labels = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(axes), P(axes)),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )(qrows, state["proj"], state["labels"])
+    return {"dist": dist, "labels": labels, "votes": -dist}

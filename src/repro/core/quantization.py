@@ -1,0 +1,81 @@
+"""Quantization-aware training primitives (paper Sec. 3.2/3.3).
+
+Implements the modified QAT of Jacob et al. [23] used by the paper:
+
+* std-based clipping of controller outputs before quantization (outliers
+  disproportionately widen the quantization range),
+* straight-through-estimator rounding,
+* ASYMMETRIC schemes: the query is quantized to 4 levels (one MCAM word)
+  while supports get ``levels`` (e.g. 3*CL+1 for MTMC) -- the controller
+  learns to be robust to the coarse query that AVSS searches with.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def ste_round(x: jax.Array) -> jax.Array:
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    levels: int
+    clip_std: float = 2.5  # clip to mean +/- clip_std * std before scaling
+
+
+def clip_range(x: jax.Array, clip_std: float) -> tuple[jax.Array, jax.Array]:
+    """Std-determined clip range, computed batch-wide and detached (the range
+    is a calibration statistic, not a learnable path). Clamped to the actual
+    data extent so one-sided distributions (e.g. post-ReLU embeddings) don't
+    waste quantization levels on an empty half-range."""
+    xs = jax.lax.stop_gradient(x)
+    mu = xs.mean()
+    sd = xs.std() + 1e-8
+    lo = jnp.maximum(mu - clip_std * sd, xs.min())
+    hi = jnp.minimum(mu + clip_std * sd, xs.max() + 1e-8)
+    return lo, hi
+
+
+def fake_quant(x: jax.Array, spec: QuantSpec,
+               rng_range: tuple[jax.Array, jax.Array] | None = None
+               ) -> tuple[jax.Array, jax.Array, tuple[jax.Array, jax.Array]]:
+    """Quantize to [0, levels) with STE.
+
+    Returns (q_int_like, x_dequant, (lo, hi)): q is float-typed but integer
+    valued (gradients flow via STE); x_dequant maps back to the input scale.
+    """
+    lo, hi = clip_range(x, spec.clip_std) if rng_range is None else rng_range
+    scale = (spec.levels - 1) / (hi - lo)
+    xc = jnp.clip(x, lo, hi)
+    q = ste_round((xc - lo) * scale)
+    q = jnp.clip(q, 0, spec.levels - 1)
+    return q, q / scale + lo, (lo, hi)
+
+
+def quantize_asymmetric(query: jax.Array, support: jax.Array,
+                        support_levels: int, clip_std: float = 2.5,
+                        query_levels: int = 4):
+    """Paper's asymmetric QAT: a SHARED clip range (from the support
+    statistics, the stored distribution) but different level counts.
+    Returns (q_query, q_support) integer-valued float arrays."""
+    rng = clip_range(jnp.concatenate([support.ravel(), query.ravel()]), clip_std)
+    qq, _, _ = fake_quant(query, QuantSpec(query_levels, clip_std), rng)
+    qs, _, _ = fake_quant(support, QuantSpec(support_levels, clip_std), rng)
+    return qq, qs

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: fused MCAM string search (mismatch -> current -> votes).
+
+Computes, for every (query, support) pair in a VMEM-tiled block, the noisy
+series-resistance string currents and SA vote accumulation of the simulated
+NAND MCAM -- the full inner loop of AVSS/SVSS (see kernels/ref.py for the
+exact semantics contract).
+
+Blocking: grid (B/tb, N/tn); each program holds
+    q tile (tb, S, sl) int8, s tile (tn, S, sl) int8      in VMEM
+and walks the S strings with a fori_loop, producing (tb, tn) vote and
+distance accumulators. Per-string intermediates are (tb, tn, sl) f32 --
+with tb=8, tn=128, sl=24 that is ~100 KiB, comfortably inside VMEM, and the
+int8 tiles give high VMEM reuse: each q/s byte is used tn/tb times.
+
+Noise is the counter-based hash of repro.core.mcam, so results are
+bit-identical to the reference regardless of tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import mcam as mcam_lib
+from repro.core.encodings import MAX_MISMATCH
+from repro.core.mcam import MCAMConfig
+from repro.kernels.ref import READ_SEED_OFFSET
+
+DEFAULT_TILE_B = 8
+DEFAULT_TILE_N = 128
+
+
+def _search_kernel(q_ref, s_ref, w_ref, th_ref, votes_ref, dist_ref, *,
+                   cfg: MCAMConfig, noisy: bool, S: int, sl: int,
+                   tile_b: int, tile_n: int):
+    bi = pl.program_id(0)
+    ni = pl.program_id(1)
+    b_abs = (bi * tile_b
+             + jax.lax.broadcasted_iota(jnp.uint32, (tile_b, 1), 0))
+    n_abs = (ni * tile_n
+             + jax.lax.broadcasted_iota(jnp.uint32, (1, tile_n), 1))
+    cell = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, sl), 2)
+    th = th_ref[...]                                     # (K,)
+    log_rho = jnp.float32(np.log(cfg.rho))
+
+    def body(s, carry):
+        votes, dist = carry
+        qw = pl.load(q_ref, (slice(None), pl.ds(s, 1), slice(None)))
+        sw = pl.load(s_ref, (slice(None), pl.ds(s, 1), slice(None)))
+        w = pl.load(w_ref, (pl.ds(s, 1),))[0]
+        # (tb, tn, sl) per-cell mismatch
+        m = jnp.abs(qw.astype(jnp.int32)[:, 0][:, None, :]
+                    - sw.astype(jnp.int32)[:, 0][None, :, :]).astype(jnp.float32)
+        string_id = n_abs.astype(jnp.uint32) * jnp.uint32(S) + s.astype(jnp.uint32)
+        if noisy:
+            dev = mcam_lib.hash_normal(b_abs[:, :, None], string_id[:, :, None],
+                                       cell, seed=cfg.seed)
+            m_eff = jnp.clip(m + cfg.sigma_device * dev, 0.0, float(MAX_MISMATCH))
+        else:
+            m_eff = m
+        r = jnp.exp(m_eff * log_rho).sum(-1)             # (tb, tn)
+        cur = jnp.float32(sl) / r
+        if noisy:
+            rd = mcam_lib.hash_normal(b_abs, string_id,
+                                      seed=cfg.seed + READ_SEED_OFFSET)
+            cur = cur * (1.0 + cfg.sigma_read * rd)
+        v = (cur[:, :, None] > th[None, None, :]).sum(-1).astype(jnp.float32)
+        return votes + w * v, dist + w * m.sum(-1)
+
+    zeros = jnp.zeros((tile_b, tile_n), jnp.float32)
+    votes, dist = jax.lax.fori_loop(0, S, body, (zeros, zeros))
+    votes_ref[...] = votes
+    dist_ref[...] = dist
+
+
+def mcam_search_pallas(q_strings: jax.Array, s_strings: jax.Array,
+                       weights: jax.Array, thresholds: jax.Array,
+                       cfg: MCAMConfig, *, noisy: bool = True,
+                       tile_b: int = DEFAULT_TILE_B,
+                       tile_n: int = DEFAULT_TILE_N,
+                       interpret: bool | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """q (B, S, sl) int8, s (N, S, sl) int8 -> votes (B, N), dist (B, N).
+
+    B and N must be multiples of the tile sizes (ops.py pads).
+    """
+    B, S, sl = q_strings.shape
+    N = s_strings.shape[0]
+    assert B % tile_b == 0 and N % tile_n == 0, (B, N, tile_b, tile_n)
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    grid = (B // tile_b, N // tile_n)
+    kernel = functools.partial(
+        _search_kernel, cfg=cfg, noisy=noisy, S=S, sl=sl,
+        tile_b=tile_b, tile_n=tile_n)
+    out_shape = [jax.ShapeDtypeStruct((B, N), jnp.float32)] * 2
+    votes, dist = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, S, sl), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((tile_n, S, sl), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((S,), lambda i, j: (0,)),
+            pl.BlockSpec(thresholds.shape, lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b, tile_n), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_b, tile_n), lambda i, j: (i, j)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(q_strings, s_strings, weights, thresholds)
+    return votes, dist

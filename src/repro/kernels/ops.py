@@ -1,0 +1,183 @@
+"""Jitted wrappers around the Pallas MCAM kernels (padding, layout, dispatch).
+
+Public entry points:
+
+  mcam_search(q_grid, s_grid, weights, cfg, thresholds)
+      Exact paper-faithful search; dispatches to the fused Pallas kernel
+      (VPU path) with tile padding. Semantics == kernels/ref.py.
+
+  avss_ideal_dist(q_values, s_values, enc)
+      Ideal digital AVSS distance via the MXU LUT-matmul kernel.
+
+  two_phase_search(q_values, s_values, cfg, k)
+      Beyond-paper TPU pipeline: MXU shortlist (ideal distance) + exact noisy
+      rescoring of the top-k candidates. Bit-identical votes to the full
+      search for every support that makes the shortlist.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encodings as enc_lib
+from repro.core import mcam as mcam_lib
+from repro.core.encodings import Encoding
+from repro.core.mcam import MCAMConfig
+from repro.kernels import mcam_dist, ref
+from repro.kernels import mcam_search as mcam_search_kernel
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flatten_strings(grid: jax.Array) -> jax.Array:
+    """(X, seg, L, sl) -> (X, seg*L, sl)."""
+    x, seg, L, sl = grid.shape
+    return grid.reshape(x, seg * L, sl)
+
+
+def broadcast_query(q_grid: jax.Array, L: int) -> jax.Array:
+    """(B, seg, Lq, sl) -> (B, seg, L, sl); AVSS queries have Lq == 1."""
+    if q_grid.shape[2] == L:
+        return q_grid
+    assert q_grid.shape[2] == 1
+    return jnp.broadcast_to(q_grid, (*q_grid.shape[:2], L, q_grid.shape[3]))
+
+
+def mcam_search(q_grid: jax.Array, s_grid: jax.Array, weights: jax.Array,
+                cfg, thresholds: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Drop-in kernel backend for repro.core.avss.search_quantized."""
+    L = s_grid.shape[2]
+    seg = s_grid.shape[1]
+    q = flatten_strings(broadcast_query(q_grid, L)).astype(jnp.int8)
+    s = flatten_strings(s_grid).astype(jnp.int8)
+    w_flat = jnp.tile(weights.astype(jnp.float32), seg)
+    B, N = q.shape[0], s.shape[0]
+    tb = min(mcam_search_tile_b(), max(B, 1))
+    tn = min(mcam_search_tile_n(), max(N, 1))
+    qp = _pad_to(q, 0, tb)
+    sp = _pad_to(s, 0, tn)
+    votes, dist = mcam_search_kernel.mcam_search_pallas(
+        qp, sp, w_flat, thresholds.astype(jnp.float32), cfg.mcam,
+        noisy=cfg.noisy, tile_b=tb, tile_n=tn)
+    return votes[:B, :N], dist[:B, :N]
+
+
+def mcam_search_tile_b() -> int:
+    return mcam_search_kernel.DEFAULT_TILE_B
+
+
+def mcam_search_tile_n() -> int:
+    return mcam_search_kernel.DEFAULT_TILE_N
+
+
+# ---------------------------------------------------------------------------
+# MXU LUT path.
+# ---------------------------------------------------------------------------
+
+
+def support_projection(s_values: jax.Array, enc: Encoding,
+                       dtype=jnp.bfloat16) -> jax.Array:
+    """(N, d) int values -> (N, 4*d) LUT projection (precompute at write time).
+
+    bf16 is exact for integer LUT entries < 256 (always true for MTMC with
+    CL <= 85); pass dtype=jnp.float32 for long weighted encodings.
+    """
+    lut = jnp.asarray(enc_lib.avss_sum_lut(enc))          # (4, levels)
+    proj = lut.T[s_values]                                # (N, d, 4)
+    return proj.reshape(s_values.shape[0], -1).astype(dtype)
+
+
+def query_onehot(q_values: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """(B, d) ints in [0,4) -> (B, 4*d) one-hot."""
+    oh = jax.nn.one_hot(q_values, enc_lib.CELL_STATES, dtype=dtype)
+    return oh.reshape(q_values.shape[0], -1)
+
+
+def avss_ideal_dist(q_values: jax.Array, s_values: jax.Array, enc: Encoding,
+                    dtype=jnp.bfloat16) -> jax.Array:
+    """(B, N) exact digital AVSS distances on the MXU."""
+    q1h = query_onehot(q_values, dtype)
+    sp = support_projection(s_values, enc, dtype)
+    B, K = q1h.shape
+    N = sp.shape[0]
+    tm, tn, tk = 8, 512, 512
+    q1h = _pad_to(_pad_to(q1h, 0, tm), 1, tk)
+    sp = _pad_to(_pad_to(sp, 0, tn), 1, tk)
+    out = mcam_dist.lut_dist_matmul(q1h, sp, tile_m=tm, tile_n=tn, tile_k=tk)
+    return out[:B, :N]
+
+
+# ---------------------------------------------------------------------------
+# Two-phase search: MXU shortlist + exact rescore.
+# ---------------------------------------------------------------------------
+
+
+def rescore_shortlist(q_grid: jax.Array, s_grid: jax.Array,
+                      short_idx: jax.Array, weights: jax.Array,
+                      cfg, thresholds: jax.Array) -> jax.Array:
+    """Exact noisy votes for per-query shortlists.
+
+    q_grid (B, seg, Lq, sl); s_grid (N, seg, L, sl); short_idx (B, K).
+    Uses GLOBAL support indices for the noise counters, so votes are
+    bit-identical to the full search. Returns votes (B, K).
+    """
+    L = s_grid.shape[2]
+    q = flatten_strings(broadcast_query(q_grid, L))        # (B, S, sl)
+    s = flatten_strings(s_grid)                            # (N, S, sl)
+    B, S, sl = q.shape
+    sg = s[short_idx]                                      # (B, K, S, sl)
+    m = jnp.abs(q[:, None].astype(jnp.int32) - sg.astype(jnp.int32))
+    m = m.astype(jnp.float32)                              # (B, K, S, sl)
+    string_id = (short_idx.astype(jnp.uint32)[..., None] * jnp.uint32(S)
+                 + jnp.arange(S, dtype=jnp.uint32)[None, None, :])
+    b_idx = jnp.arange(B, dtype=jnp.uint32)[:, None, None]
+    mc = cfg.mcam
+    if cfg.noisy:
+        cell = jnp.arange(sl, dtype=jnp.uint32)
+        dev = mcam_lib.hash_normal(b_idx[..., None], string_id[..., None],
+                                   cell, seed=mc.seed)
+        m_eff = jnp.clip(m + mc.sigma_device * dev, 0.0,
+                         float(enc_lib.MAX_MISMATCH))
+    else:
+        m_eff = m
+    r = jnp.exp(m_eff * jnp.float32(np.log(mc.rho))).sum(-1)
+    cur = jnp.float32(sl) / r
+    if cfg.noisy:
+        rd = mcam_lib.hash_normal(b_idx, string_id,
+                                  seed=mc.seed + ref.READ_SEED_OFFSET)
+        cur = cur * (1.0 + mc.sigma_read * rd)
+    v = (cur[..., None] > thresholds).sum(-1).astype(jnp.float32)
+    seg = s_grid.shape[1]
+    w_flat = jnp.tile(weights.astype(jnp.float32), seg)
+    return (v * w_flat[None, None, :]).sum(-1)             # (B, K)
+
+
+def two_phase_search(q_values: jax.Array, s_values: jax.Array, cfg,
+                     k: int = 64) -> dict[str, jax.Array]:
+    """Full beyond-paper pipeline. cfg: repro.core.avss.SearchConfig (avss)."""
+    from repro.core import avss as avss_lib
+    enc = cfg.enc
+    assert cfg.mode == "avss", "two-phase search shortlists with the AVSS LUT"
+    dist = avss_ideal_dist(q_values, s_values, enc)        # (B, N)
+    k = min(k, s_values.shape[0])
+    neg, idx = jax.lax.top_k(-dist, k)
+    sl = cfg.mcam.string_len
+    s_grid = avss_lib.layout_support(s_values, enc, sl)
+    q_grid = avss_lib.layout_query(q_values, enc, "avss", sl)
+    th = jnp.asarray(cfg.mcam.thresholds())
+    votes = rescore_shortlist(q_grid, s_grid, idx, enc.weights_array(), cfg, th)
+    return {"votes": votes, "dist": -neg, "indices": idx,
+            "iterations": avss_lib.search_iterations(
+                q_values.shape[-1], enc, "avss", sl)}

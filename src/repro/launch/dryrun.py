@@ -1,0 +1,359 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^^ MUST precede every other import (jax locks the device count on first
+# init). The 512 placeholder CPU devices exist ONLY for this dry-run process.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch llama3-405b --shape train_4k --mesh single [--retrieval] \
+        [--out results.json]
+
+Succeeding here proves the distribution config is coherent: shardings
+legalize, the SPMD partitioner finds a schedule, per-device buffers are
+bounded, and the collective set is what DESIGN.md claims. Output JSON:
+  flops / bytes from compiled.cost_analysis(),
+  per-collective byte totals parsed from the partitioned HLO,
+  memory_analysis (argument/output/temp/peak bytes per device),
+  roofline terms vs TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI).
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, load_config, supports_shape
+from repro.configs.base import TrainConfig
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tfm
+from repro.models.sharding import active_mesh, rules_for_mesh
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(tok: str) -> int:
+    m = _SHAPE_RE.match(tok)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return 0
+    dims = m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[m.group(1)]
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Sum per-device payload bytes of every collective in partitioned HLO.
+
+    Methodology (documented in EXPERIMENTS.md): result-shape bytes per op,
+    doubled for all-reduce (reduce+broadcast phases of a ring); the (P-1)/P
+    ring factor is dropped (upper bound).
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        for kind in _COLLECTIVES:
+            # match "<kind>(" or "<kind>-start(" as the op on this line
+            if re.search(rf"= [^=]*\b{kind}(-start)?\(", s):
+                rhs = s.split("=", 1)[1].strip()
+                # result type: everything before the op name
+                head = re.split(rf"\b{kind}(-start)?\(", rhs)[0]
+                shapes = _SHAPE_RE.findall(head)
+                nbytes = sum(_shape_bytes(f"{t}[{d}]") for t, d in shapes)
+                if kind == "all-reduce":
+                    nbytes *= 2
+                out[kind]["count"] += 1
+                out[kind]["bytes"] += nbytes
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _tree_bytes_per_device(tree) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        bpe = jnp.dtype(leaf.dtype).itemsize
+        shard = leaf.sharding
+        nshards = getattr(shard, "num_devices", 1)
+        if hasattr(shard, "shard_shape"):
+            n = int(np.prod(shard.shard_shape(leaf.shape))) if leaf.shape else 1
+        total += n * bpe
+    return total
+
+
+def _with_shardings(abs_tree, shard_tree):
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abs_tree, shard_tree)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense train) / 2*N*D (inference), N = active
+    params (excluding embeddings), D = tokens processed."""
+    aps = tfm.abstract_params(cfg)
+    total = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(aps))
+    embed = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2) \
+        if cfg.input_mode == "tokens" or not cfg.tie_embeddings else 0
+    n_params = total - embed
+    if cfg.moe is not None:
+        m = cfg.moe
+        layers_moe = sum(cfg.moe_layers())
+        expert_p = m.n_routed * 3 * cfg.d_model * m.d_ff * layers_moe
+        active_p = (m.top_k / m.n_routed) * expert_p
+        n_params = n_params - expert_p + active_p
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n_params * tokens
+
+
+def _compile_step(cfg, shape, mesh, rules, tc, retrieval, unroll=False):
+    """Lower + compile the step `shape` dictates. Returns (compiled,
+    state_bytes_per_device)."""
+    p_shard = steps_lib.param_shardings(cfg, mesh, rules)
+    params_abs = tfm.abstract_params(cfg)
+    params_in = _with_shardings(params_abs, p_shard)
+    batch_in = steps_lib.input_specs(cfg, shape, mesh, rules)
+
+    with mesh, active_mesh(mesh, rules):
+        if shape.kind == "train":
+            step, optimizer = steps_lib.make_train_step(
+                cfg, tc, rules, unroll_accum=unroll)
+            opt_abs = jax.eval_shape(optimizer.init, params_abs)
+            opt_shard = steps_lib.opt_shardings(opt_abs, params_abs, p_shard,
+                                                mesh, rules)
+            opt_in = _with_shardings(opt_abs, opt_shard)
+            lowered = jax.jit(step).lower(params_in, opt_in, batch_in)
+            state_bytes = (_tree_bytes_per_device(params_in)
+                           + _tree_bytes_per_device(opt_in))
+        elif shape.kind == "prefill":
+            step = steps_lib.make_prefill_step(cfg, rules)
+            lowered = jax.jit(step).lower(params_in, batch_in)
+            state_bytes = _tree_bytes_per_device(params_in)
+        else:  # decode
+            c_shard, cache_abs = steps_lib.cache_shardings(
+                cfg, shape.global_batch, shape.seq_len, mesh, rules)
+            cache_in = _with_shardings(cache_abs, c_shard)
+            pos_in = jax.ShapeDtypeStruct((), jnp.int32)
+            if retrieval:
+                from repro.core.memory import MemoryConfig, init_memory
+                from jax.sharding import NamedSharding
+                from jax.sharding import PartitionSpec as P
+                mem_cfg = MemoryConfig(capacity=131072, dim=48)
+                mem_abs = jax.eval_shape(lambda: init_memory(mem_cfg))
+                row = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+                rep = NamedSharding(mesh, P())
+                mem_shard = {k: (row if getattr(v, "ndim", 0) >= 1 else rep)
+                             for k, v in mem_abs.items()}
+                mem_in = _with_shardings(mem_abs, mem_shard)
+                step = steps_lib.make_serve_step_with_mcam(cfg, rules,
+                                                           mem_cfg)
+                lowered = jax.jit(step).lower(params_in, cache_in, batch_in,
+                                              pos_in, mem_in)
+            else:
+                step = steps_lib.make_serve_step(cfg, rules)
+                lowered = jax.jit(step).lower(params_in, cache_in, batch_in,
+                                              pos_in)
+            state_bytes = (_tree_bytes_per_device(params_in)
+                           + _tree_bytes_per_device(cache_in))
+        compiled = lowered.compile()
+    return compiled, int(state_bytes)
+
+
+def _metrics(compiled) -> dict:
+    """Per-device flops/bytes + per-collective byte totals (UNcorrected:
+    scan bodies counted once -- see _corrected_metrics)."""
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    out = {"flops": float(cost.get("flops", 0.0)),
+           "bytes": float(cost.get("bytes accessed", 0.0))}
+    for k in _COLLECTIVES:
+        out[f"coll_{k}"] = float(coll[k]["bytes"])
+    out["coll_total"] = float(coll["total_bytes"])
+    return out
+
+
+def _m_add(a, b, sa=1.0, sb=1.0):
+    return {k: sa * a[k] + sb * b.get(k, 0.0) for k in a}
+
+
+def _m_clamp(a):
+    return {k: max(v, 0.0) for k, v in a.items()}
+
+
+def _corrected_metrics(cfg, shape, mesh, rules, tc, retrieval) -> dict:
+    """Trip-count-corrected totals. XLA's cost_analysis counts each
+    while-loop (lax.scan) body ONCE; the real step executes the layer-scan
+    body L_g times inside an accumulation scan of A steps. We recover true
+    totals by finite-differencing compiled cost over scan lengths:
+
+        M1   : every layer group at count 1, accumulation 1
+        M2_g : group g at count 2 (others 1), accumulation 1
+        M3   : groups at 1, accumulation 2              (train only)
+
+        F_g      = M2_g - M1                 (one layer of group g)
+        F_micro  = (M3 - M1) - sum_g F_g     (per-microbatch fixed cost)
+        F_fixed  = 2*M1 - M3
+        total    = F_fixed + A * (F_micro + sum_g L_g * F_g)
+    """
+    groups = [list(g) for g in cfg.layer_groups()]
+    mb = steps_lib.microbatch_for(cfg, shape)
+    accum = (shape.global_batch // mb) if shape.kind == "train" else 1
+
+    def variant(counts, accum_n):
+        vcfg = dataclasses.replace(
+            cfg, scan_layers=False, layer_groups_override=tuple(
+                (t, m, c) for (t, m, _), c in zip(groups, counts)))
+        vshape = dataclasses.replace(
+            shape, global_batch=(mb * accum_n if shape.kind == "train"
+                                 else shape.global_batch),
+            microbatch=(mb if shape.kind == "train" else 0))
+        compiled, _ = _compile_step(vcfg, vshape, mesh, rules, tc, retrieval,
+                                    unroll=True)
+        return _metrics(compiled)
+
+    ones = [1] * len(groups)
+    m1 = variant(ones, 1)
+    f_groups = []
+    for gi in range(len(groups)):
+        counts = list(ones)
+        counts[gi] = 2
+        m2 = variant(counts, 1)
+        f_groups.append(_m_clamp(_m_add(m2, m1, 1.0, -1.0)))
+    if shape.kind == "train" and accum > 1:
+        m3 = variant(ones, 2)
+        sum_fg = {k: sum(f[k] for f in f_groups) for k in m1}
+        f_micro = _m_clamp(_m_add(_m_add(m3, m1, 1.0, -1.0), sum_fg,
+                                  1.0, -1.0))
+        f_fixed = _m_clamp(_m_add(m1, _m_add(m3, m1, 1.0, -1.0), 1.0, -1.0))
+    else:
+        sum_fg = {k: sum(f[k] for f in f_groups) for k in m1}
+        f_micro = {k: 0.0 for k in m1}
+        f_fixed = _m_clamp(_m_add(m1, sum_fg, 1.0, -1.0))
+        accum = 1
+
+    counts = [c for (_, _, c) in cfg.layer_groups()]
+    total = {}
+    for k in m1:
+        inner = f_micro[k] + sum(L * f[k] for L, f in zip(counts, f_groups))
+        total[k] = f_fixed[k] + accum * inner
+    return total
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             retrieval: bool = False, calibrate: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+    shape = SHAPES[shape_name]
+    rules = steps_lib.rules_for(mesh, shape)  # REPRO_OPT>=3: serving rules
+    cfg = load_config(arch)
+    ok, why = supports_shape(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        return {**rec, "status": "skipped", "reason": why}
+
+    dp = int(np.prod([mesh.shape[a] for a in rules.batch]))
+    cfg = steps_lib.adapt_config(cfg, shape, dp)
+    tc = TrainConfig()
+
+    # 1. the deliverable: the FULL cell must lower + compile
+    t0 = time.time()
+    compiled, state_bytes = _compile_step(cfg, shape, mesh, rules, tc,
+                                          retrieval)
+    compile_s = time.time() - t0
+    try:
+        ma = compiled.memory_analysis()
+        mem = {k: int(getattr(ma, k)) for k in
+               ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes")
+               if hasattr(ma, k)}
+    except Exception as e:  # pragma: no cover
+        mem = {"error": str(e)}
+    raw = _metrics(compiled)
+
+    # 2. trip-count-corrected roofline terms
+    corr = _corrected_metrics(cfg, shape, mesh, rules, tc, retrieval) \
+        if calibrate else raw
+
+    flops = corr["flops"]
+    bytes_acc = corr["bytes"]
+    coll_bytes = corr["coll_total"]
+    mf = model_flops(cfg, shape)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    return {
+        **rec, "status": "ok", "chips": n_chips,
+        "compile_s": round(compile_s, 1),
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll_bytes,
+        "collectives_corrected": {k: corr[f"coll_{k}"] for k in _COLLECTIVES},
+        "raw_uncorrected": raw,
+        "memory_analysis": mem,
+        "state_bytes_per_device": int(state_bytes),
+        "model_flops_total": mf,
+        "useful_flops_ratio": (mf / (flops * n_chips)) if flops else None,
+        "roofline": {
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s, "dominant": dominant,
+            "bound_s": max(compute_s, memory_s, collective_s),
+        },
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--retrieval", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    rec = run_cell(args.arch, args.shape, args.mesh == "multi",
+                   retrieval=args.retrieval)
+    js = json.dumps(rec, indent=1)
+    print(js)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(js)
+    if rec["status"] == "ok":
+        print(f"\nMEMORY: {rec['memory_analysis']}", file=sys.stderr)
+        print(f"COST: flops/dev={rec['flops_per_device']:.3e} "
+              f"bytes/dev={rec['bytes_per_device']:.3e}", file=sys.stderr)
+    return 0 if rec["status"] in ("ok", "skipped") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,87 @@
+"""Serving launcher: batched-request decode loop with optional MCAM
+retrieval fusion (reduced configs run on CPU; the dry-run lowers the same
+serve_step for the production meshes).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --smoke \
+        --batch 4 --steps 16 [--retrieval]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import load_config
+from repro.launch import steps as steps_lib
+from repro.models import transformer as tfm
+from repro.models.sharding import Rules
+
+
+def serve(arch: str, smoke: bool, batch: int, steps: int, prompt_len: int,
+          retrieval: bool = False):
+    cfg = load_config(arch, smoke=smoke)
+    rules = Rules(batch=(), fsdp=(), tensor=(), expert=())
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    max_seq = prompt_len + steps
+    caches = tfm.init_cache(cfg, batch, max_seq)
+    step_fn = jax.jit(steps_lib.make_serve_step(cfg, rules))
+
+    mstate = mem_cfg = None
+    if retrieval:
+        from repro.core import memory as mem
+        from repro.core.avss import SearchConfig
+        from repro.core.memory import MemoryConfig
+        mem_cfg = MemoryConfig(capacity=1024, dim=min(48, cfg.d_model),
+                               search=SearchConfig("mtmc", cl=8, mode="avss",
+                                                   use_kernel="ref"))
+        mstate = mem.init_memory(mem_cfg)
+        vecs = jax.random.normal(jax.random.PRNGKey(7), (256, mem_cfg.dim))
+        toks = jax.random.randint(jax.random.PRNGKey(8), (256,), 0,
+                                  cfg.vocab_size)
+        mstate = mem.calibrate(mstate, vecs, mem_cfg)
+        mstate = mem.write(mstate, vecs, toks, mem_cfg)
+        step_fn = jax.jit(steps_lib.make_serve_step_with_mcam(cfg, rules,
+                                                              mem_cfg))
+
+    key = jax.random.PRNGKey(1)
+    tok = jax.random.randint(key, (batch, 1), 0, cfg.vocab_size)
+    for t in range(prompt_len):  # warm the cache with a random prompt
+        args = (params, caches, {"tokens": tok}, jnp.int32(t))
+        out = step_fn(*args, mstate) if retrieval else step_fn(*args)
+        logits, caches = out
+        tok = jax.random.randint(jax.random.fold_in(key, t), (batch, 1), 0,
+                                 cfg.vocab_size)
+    t0 = time.time()
+    toks = []
+    for i in range(steps):
+        args = (params, caches, {"tokens": tok}, jnp.int32(prompt_len + i))
+        out = step_fn(*args, mstate) if retrieval else step_fn(*args)
+        logits, caches = out
+        tok = jnp.argmax(logits[:, 0], -1)[:, None]
+        toks.append(np.asarray(tok))
+    dt = time.time() - t0
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    print(f"{arch}: {steps} steps x {batch} reqs in {dt:.2f}s "
+          f"({steps * batch / dt:.1f} tok/s)")
+    return np.concatenate(toks, 1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--retrieval", action="store_true")
+    args = ap.parse_args(argv)
+    serve(args.arch, args.smoke, args.batch, args.steps, args.prompt_len,
+          args.retrieval)
+
+
+if __name__ == "__main__":
+    main()

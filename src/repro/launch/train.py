@@ -1,0 +1,124 @@
+"""Training launcher (CPU-runnable for reduced configs; the same code path
+the dry-run lowers for the production meshes).
+
+    PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b --smoke \
+        --steps 50 --batch 8 --seq 128
+
+Fault tolerance wired in: CheckpointManager (async, atomic, elastic),
+PreemptionHandler (SIGTERM => final checkpoint), AnomalyDetector (NaN /
+grad-spike step skipping -- also enforced inside the jitted step),
+StepWatchdog (straggler signal), deterministic step-addressable data
+(restart-consistent).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import SHAPES, load_config
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.data.lm import LMDataConfig, SyntheticLM, embedding_batch_for_step
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as tfm
+from repro.models.sharding import active_mesh, rules_for_mesh
+from repro.runtime.ft import (AnomalyDetector, PreemptionHandler,
+                              StepWatchdog)
+
+
+def make_batch(cfg, shape, data, step, accum, mb):
+    if cfg.input_mode == "tokens":
+        b = data.batch_for_step(step)
+    else:
+        b = embedding_batch_for_step(step, shape.global_batch, shape.seq_len,
+                                     cfg.d_model, cfg.vocab_size,
+                                     mrope=cfg.rope_type == "mrope")
+    return {k: np.asarray(v).reshape((accum, mb) + v.shape[1:])
+            for k, v in b.items()}
+
+
+def train(arch: str, smoke: bool, steps: int, batch: int, seq: int,
+          ckpt_dir: str, resume: bool = False, model_parallel: int = 1,
+          log_every: int = 10):
+    cfg = load_config(arch, smoke=smoke)
+    shape = ShapeConfig("custom", seq, batch, "train")
+    tc = TrainConfig(total_steps=steps, checkpoint_dir=ckpt_dir,
+                     learning_rate=1e-3 if smoke else 3e-4)
+    mesh = make_host_mesh(model_parallel)
+    rules = rules_for_mesh(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in rules.batch]))
+    cfg = steps_lib.adapt_config(cfg, shape, dp)
+    mb = steps_lib.microbatch_for(cfg, shape)
+    accum = shape.global_batch // mb
+
+    data = SyntheticLM(LMDataConfig(seq, batch, cfg.vocab_size))
+    with mesh, active_mesh(mesh, rules):
+        step_fn, optimizer = steps_lib.make_train_step(cfg, tc, rules)
+        params = tfm.init(jax.random.PRNGKey(tc.seed), cfg)
+        opt_state = optimizer.init(params)
+        jstep = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        mgr = CheckpointManager(ckpt_dir, every=tc.checkpoint_every)
+        start = 0
+        if resume and mgr.latest_step() is not None:
+            start = mgr.latest_step()
+            state = mgr.restore({"params": params, "opt": opt_state,
+                                 "step": jnp.zeros((), jnp.int32)})
+            params, opt_state = state["params"], state["opt"]
+            print(f"resumed from step {start}")
+
+        pre = PreemptionHandler()
+        anom = AnomalyDetector()
+        dog = StepWatchdog()
+        losses = []
+        for step in range(start, steps):
+            dog.start()
+            b = make_batch(cfg, shape, data, step, accum, mb)
+            params, opt_state, metrics = jstep(params, opt_state, b)
+            loss = float(metrics["loss"])
+            gn = float(metrics["grad_norm"])
+            dt = dog.stop()
+            losses.append(loss)
+            if not anom.check(loss, gn):
+                print(f"step {step}: ANOMALY skipped (loss={loss}, gn={gn})")
+            if step % log_every == 0 or step == steps - 1:
+                print(f"step {step:5d} loss {loss:.4f} gnorm {gn:.3f} "
+                      f"{dt*1000:.0f}ms")
+            mgr.maybe_save(step + 1, {"params": params, "opt": opt_state,
+                                      "step": jnp.int32(step + 1)})
+            if pre.preempted:
+                print("preemption requested -> checkpoint + exit")
+                mgr.maybe_save(step + 1,
+                               {"params": params, "opt": opt_state,
+                                "step": jnp.int32(step + 1)}, force=True)
+                break
+        mgr.wait()
+    return losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args(argv)
+    losses = train(args.arch, args.smoke, args.steps, args.batch, args.seq,
+                   args.ckpt_dir, args.resume, args.model_parallel)
+    print(f"first-10 mean {np.mean(losses[:10]):.4f} -> "
+          f"last-10 mean {np.mean(losses[-10:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

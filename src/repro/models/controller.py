@@ -1,0 +1,133 @@
+"""Feature-extraction controllers for the paper's MANN experiments.
+
+Conv4  (Vinyals et al. [3])   -- Omniglot, 48-d embeddings (paper Sec. 4.1).
+ResNet12 (Oreshkin et al. [33]) -- CUB, 480-d embeddings.
+
+Pure functional JAX (init_* -> params pytree, apply_* -> embeddings). We use
+GroupNorm instead of BatchNorm so train == eval behaviour (no running stats to
+checkpoint); this does not affect any paper claim, which are all deltas
+between encodings/search modes on the same controller.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout)) * math.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((cout,))}
+
+
+def _conv(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _group_norm(x, groups=8, eps=1e-5):
+    n, h, w, c = x.shape
+    g = math.gcd(groups, c)
+    xg = x.reshape(n, h, w, g, c // g)
+    mu = xg.mean((1, 2, 4), keepdims=True)
+    var = xg.var((1, 2, 4), keepdims=True)
+    return ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(n, h, w, c)
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+# ---------------------------------------------------------------------------
+# Conv4
+# ---------------------------------------------------------------------------
+
+
+def init_conv4(key, in_ch=1, width=64, embed_dim=48):
+    keys = jax.random.split(key, 5)
+    params = {"blocks": []}
+    cin = in_ch
+    for i in range(4):
+        params["blocks"].append(_conv_init(keys[i], 3, 3, cin, width))
+        cin = width
+    params["proj"] = {
+        "w": jax.random.normal(keys[4], (width, embed_dim)) / math.sqrt(width),
+        "b": jnp.zeros((embed_dim,)),
+    }
+    return params
+
+
+def apply_conv4(params, images):
+    """images (B, H, W, C) -> (B, embed_dim) non-negative embeddings."""
+    x = images
+    for blk in params["blocks"]:
+        x = _conv(blk, x)
+        x = _group_norm(x)
+        x = jax.nn.relu(x)
+        if min(x.shape[1], x.shape[2]) >= 2:
+            x = _maxpool(x)
+    x = x.mean((1, 2))                                     # GAP
+    x = x @ params["proj"]["w"] + params["proj"]["b"]
+    return jax.nn.relu(x)  # non-negative, as MCAM stores unsigned levels
+
+
+# ---------------------------------------------------------------------------
+# ResNet12
+# ---------------------------------------------------------------------------
+
+
+def _res_block_init(key, cin, cout):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "c1": _conv_init(k1, 3, 3, cin, cout),
+        "c2": _conv_init(k2, 3, 3, cout, cout),
+        "c3": _conv_init(k3, 3, 3, cout, cout),
+        "sc": _conv_init(k4, 1, 1, cin, cout),
+    }
+
+
+def _res_block(p, x):
+    h = jax.nn.relu(_group_norm(_conv(p["c1"], x)))
+    h = jax.nn.relu(_group_norm(_conv(p["c2"], h)))
+    h = _group_norm(_conv(p["c3"], h))
+    x = _group_norm(_conv(p["sc"], x))
+    h = jax.nn.relu(h + x)
+    if min(h.shape[1], h.shape[2]) >= 2:
+        h = _maxpool(h)
+    return h
+
+
+def init_resnet12(key, in_ch=3, widths=(64, 160, 320, 640), embed_dim=480):
+    keys = jax.random.split(key, len(widths) + 1)
+    params = {"blocks": []}
+    cin = in_ch
+    for i, w in enumerate(widths):
+        params["blocks"].append(_res_block_init(keys[i], cin, w))
+        cin = w
+    params["proj"] = {
+        "w": jax.random.normal(keys[-1], (cin, embed_dim)) / math.sqrt(cin),
+        "b": jnp.zeros((embed_dim,)),
+    }
+    return params
+
+
+def apply_resnet12(params, images):
+    x = images
+    for blk in params["blocks"]:
+        x = _res_block(blk, x)
+    x = x.mean((1, 2))
+    x = x @ params["proj"]["w"] + params["proj"]["b"]
+    return jax.nn.relu(x)
+
+
+CONTROLLERS = {
+    "conv4": (init_conv4, apply_conv4),
+    "resnet12": (init_resnet12, apply_resnet12),
+}

@@ -1,0 +1,103 @@
+"""Mixture-of-Experts FFN (DeepSeek-style: shared + fine-grained routed).
+
+Expert parallelism is expressed with capacity-based one-hot dispatch/combine
+einsums whose GROUP axis maps onto the data-parallel mesh axis and whose
+EXPERT axis maps onto the model axis, so the partitioner executes each
+(group, expert-shard) block exactly once per device pair -- per-device
+dispatch FLOPs are T_loc * E_loc * C * d (see DESIGN.md Sec. 7; the sort-based
+dispatch that removes this overhead is a recorded perf iteration).
+
+Aux losses: switch-style load balancing + router z-loss; both returned so the
+train step can weight them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import dense_init
+from repro.models.sharding import Rules, constrain
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    m: MoEConfig = cfg.moe
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (cfg.d_model, m.n_routed), jnp.float32),
+        "we1": dense_init(ks[1], (m.n_routed, cfg.d_model, m.d_ff), dtype),
+        "we2": dense_init(ks[2], (m.n_routed, m.d_ff, cfg.d_model), dtype),
+        "we3": dense_init(ks[3], (m.n_routed, cfg.d_model, m.d_ff), dtype),
+    }
+    if m.n_shared:
+        sk = jax.random.split(ks[4], 3)
+        dsh = m.n_shared * m.d_ff
+        p["shared"] = {
+            "w1": dense_init(sk[0], (cfg.d_model, dsh), dtype),
+            "w2": dense_init(sk[1], (dsh, cfg.d_model), dtype),
+            "w3": dense_init(sk[2], (cfg.d_model, dsh), dtype),
+        }
+    return p
+
+
+def _capacity(tokens_per_group: int, m: MoEConfig) -> int:
+    c = int(tokens_per_group * m.top_k / m.n_routed * m.capacity_factor) + 1
+    return max(8, -(-c // 8) * 8)  # round up to 8 for clean tiling
+
+
+def moe_apply(p, x, cfg: ModelConfig, rules: Rules | None = None):
+    """x (B, S, D) -> (y, aux) with aux = {load_balance, z_loss}."""
+    m: MoEConfig = cfg.moe
+    rules = rules or Rules(batch=(), fsdp=(), tensor=(), expert=())
+    B, S, D = x.shape
+    T = B * S
+    G = min(m.groups, T)
+    while T % G:
+        G -= 1
+    Sg = T // G
+    xt = x.reshape(G, Sg, D)
+    xt = constrain(xt, rules, "batch", None, None)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])            # (G,Sg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, m.top_k)                 # (G,Sg,k)
+    gate = gate / (gate.sum(-1, keepdims=True) + 1e-9)         # renormalise
+
+    E = m.n_routed
+    C = _capacity(Sg, m)
+    # position of each (token, k) within its expert queue
+    sel = jax.nn.one_hot(eidx, E, dtype=jnp.int32)             # (G,Sg,k,E)
+    flat_sel = sel.reshape(G, Sg * m.top_k, E)
+    pos = jnp.cumsum(flat_sel, axis=1) - flat_sel              # (G,Sg*k,E)
+    pos = pos.reshape(G, Sg, m.top_k, E)
+    within = (pos < C) & (sel > 0)
+    # dispatch mask (G,Sg,E,C) bf16 one-hot of queue slots
+    slot_oh = jax.nn.one_hot(jnp.where(within, pos, C), C + 1,
+                             dtype=x.dtype)[..., :C]           # (G,Sg,k,E,C)
+    dispatch = (slot_oh * within[..., None].astype(x.dtype)).sum(2)
+    dispatch = constrain(dispatch, rules, "batch", None, "expert", None)
+    combine = (slot_oh * (gate[..., None, None]
+                          * within[..., None].astype(jnp.float32)
+                          ).astype(x.dtype)).sum(2)            # (G,Sg,E,C)
+    combine = constrain(combine, rules, "batch", None, "expert", None)
+
+    xe = jnp.einsum("gsd,gsec->gecd", xt, dispatch)
+    xe = constrain(xe, rules, "batch", "expert", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xe, p["we1"])
+    h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xe, p["we3"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["we2"])
+    ye = constrain(ye, rules, "batch", "expert", None, None)
+    y = jnp.einsum("gecd,gsec->gsd", ye, combine)
+
+    if m.n_shared:
+        sh = p["shared"]
+        hs = jax.nn.silu(xt @ sh["w1"]) * (xt @ sh["w3"])
+        y = y + hs @ sh["w2"]
+
+    # aux losses (switch-style: balanced routing => load_balance == 1.0)
+    me = probs.mean((0, 1))                                    # (E,)
+    ce = sel.sum(2).astype(jnp.float32).mean((0, 1)) / m.top_k
+    load_balance = E * (me * ce).sum()
+    z_loss = (jax.nn.logsumexp(logits, axis=-1) ** 2).mean()
+    return y.reshape(B, S, D), {"load_balance": load_balance, "z_loss": z_loss}

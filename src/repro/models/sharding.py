@@ -1,0 +1,166 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates every parameter and activation with LOGICAL axis names;
+a `Rules` table maps them onto physical mesh axes per deployment. The
+production meshes are (16, 16) ("data", "model") and (2, 16, 16)
+("pod", "data", "model"); the pod axis joins the data-parallel/FSDP dimension.
+
+  batch   -- data-parallel batch sharding of activations
+  fsdp    -- ZeRO-3-style weight/optimizer row sharding (gathered per layer)
+  tensor  -- Megatron-style head/ffn/vocab column sharding
+  expert  -- MoE routed-expert sharding
+  seq     -- sequence parallelism (long-context KV caches)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    batch: tuple = ("data",)
+    fsdp: tuple = ("data",)
+    tensor: tuple = ("model",)
+    expert: tuple = ("model",)
+    seq: tuple = ()
+
+    def resolve(self, *logical: str | None) -> P:
+        """Logical axis names -> PartitionSpec."""
+        out = []
+        for name in logical:
+            if name is None:
+                out.append(None)
+                continue
+            axes = getattr(self, name)
+            if not axes:
+                out.append(None)
+            elif len(axes) == 1:
+                out.append(axes[0])
+            else:
+                out.append(tuple(axes))
+        return P(*out)
+
+
+def rules_for_mesh(mesh: Mesh, *, seq_sharding: bool = False) -> Rules:
+    """Default rules for the production meshes."""
+    names = mesh.axis_names
+    dp = ("pod", "data") if "pod" in names else ("data",)
+    return Rules(
+        batch=dp,
+        fsdp=dp,
+        tensor=("model",),
+        expert=("model",),
+        seq=("data",) if seq_sharding else (),
+    )
+
+
+def logical_sharding(mesh: Mesh, rules: Rules, *logical) -> NamedSharding:
+    return NamedSharding(mesh, rules.resolve(*logical))
+
+
+_ACTIVE_MESH: list = [None]
+_ACTIVE_RULES: list = [None]
+
+
+class active_mesh:
+    """Context manager giving `constrain`/`aconstrain` a mesh (and optional
+    Rules) to bind PartitionSpecs to, so layer code can annotate activation
+    shardings without threading mesh/rules through every call."""
+
+    def __init__(self, mesh, rules=None):
+        self.mesh = mesh
+        self.rules = rules
+
+    def __enter__(self):
+        _ACTIVE_MESH[0] = self.mesh
+        _ACTIVE_RULES[0] = self.rules
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _ACTIVE_MESH[0] = None
+        _ACTIVE_RULES[0] = None
+        return False
+
+
+def aconstrain(x: jax.Array, *logical) -> jax.Array:
+    """Activation sharding constraint using the ACTIVE mesh/rules; no-op
+    when no context is installed (plain CPU tests) or when the resolved
+    spec is all-None -- an explicit replicated pin would FORCE the
+    partitioner to materialise the full tensor (e.g. gathering FSDP weights
+    into a decode step, EXPERIMENTS.md §Perf iteration 5)."""
+    mesh, rules = _ACTIVE_MESH[0], _ACTIVE_RULES[0]
+    if mesh is None or rules is None:
+        return x
+    spec = legalize_spec(rules.resolve(*logical), x.shape, mesh)
+    if all(p is None for p in spec):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+def legalize_spec(spec: P, shape, mesh) -> P:
+    """DROP mesh axes whose size doesn't divide the dim they shard.
+
+    Deliberately no shifting to neighbouring dims: shifting `tensor` onto a
+    contraction-participating dim (e.g. head_dim when n_heads % tp != 0)
+    turns every attention score matrix into a partial-sum all-reduce --
+    measured at 12 GB/layer on starcoder2 prefill (EXPERIMENTS.md Sec. Perf,
+    iteration 0). Replicating the indivisible dim is strictly cheaper.
+    """
+    import numpy as np
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ax_size = lambda a: (int(np.prod([sizes[x] for x in a]))
+                         if isinstance(a, tuple) else sizes[a])
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = [None] * len(shape)
+    for i, p in enumerate(parts):
+        if p is None:
+            continue
+        if shape[i] % ax_size(p) == 0:
+            out[i] = p
+    return P(*out)
+
+
+def constrain(x: jax.Array, rules: Rules, *logical) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op outside jit/mesh,
+    and for all-None specs -- see aconstrain)."""
+    spec = rules.resolve(*logical)
+    mesh = _ACTIVE_MESH[0]
+    try:
+        if mesh is not None:
+            spec = legalize_spec(spec, x.shape, mesh)
+            if all(p is None for p in spec):
+                return x
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        if all(p is None for p in spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+# Parameter logical specs, keyed by param-tree path leaf conventions. The
+# model init functions attach these via `ParamSpec` alongside the arrays.
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Logical axes for one parameter array ('.' entries are unsharded)."""
+    logical: tuple
+
+    def sharding(self, mesh: Mesh, rules: Rules) -> NamedSharding:
+        return logical_sharding(mesh, rules, *self.logical)
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules: Rules):
+    """Map a pytree of ParamSpec -> pytree of NamedSharding."""
+    return jax.tree_util.tree_map(
+        lambda s: s.sharding(mesh, rules), spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec))

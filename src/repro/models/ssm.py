@@ -1,0 +1,320 @@
+"""Recurrent blocks: xLSTM's mLSTM/sLSTM cells and Mamba selective SSM.
+
+* mLSTM -- matrix-memory LSTM with exponential gating. Implemented in
+  CHUNKWISE-PARALLEL form (linear-attention-style within chunks, recurrence
+  across chunks) so the MXU sees dense einsums instead of a length-S scan;
+  a per-step reference is kept for tests. O(1) decode state:
+  (C (H, dh, dh), n (H, dh), m (H)).
+* sLSTM -- scalar-memory LSTM with exponential gating and recurrent weights;
+  inherently sequential, lax.scan over time.
+* Mamba -- S6 selective SSM via associative scan (parallel prefill/train,
+  O(1) decode: (ssm_state, conv ring)).
+
+All three expose   init / apply_seq(x) -> (y, state) / apply_step(x1, state).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.sharding import aconstrain
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    di = 2 * D                        # pre-up-projection inner width
+    H = cfg.n_heads
+    dh = di // H
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": dense_init(ks[0], (D, di), dtype),
+        "wq": dense_init(ks[1], (di, H, dh), dtype),
+        "wk": dense_init(ks[2], (di, H, dh), dtype),
+        "wv": dense_init(ks[3], (di, H, dh), dtype),
+        "w_gates": dense_init(ks[4], (D, 2 * H), dtype),   # (i, f) pre-acts
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((H,)), 3.0 + jnp.arange(H, dtype=jnp.float32) * 0.5]
+        ).astype(jnp.float32),                             # forget bias high
+        "w_ogate": dense_init(ks[5], (D, H, dh), dtype),
+        "out_proj": dense_init(ks[6], (di, D), dtype),
+    }
+
+
+def _mlstm_qkv(p, x, cfg):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    xin = aconstrain(x @ p["in_proj"], "batch", None, "tensor")
+    q = jnp.einsum("bsd,dhk->bshk", xin, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xin, p["wk"]) / math.sqrt(q.shape[-1])
+    v = jnp.einsum("bsd,dhk->bshk", xin, p["wv"])
+    gates = (x @ p["w_gates"]).astype(jnp.float32) + p["gate_bias"]
+    li = gates[..., :H]                                   # log input gate
+    lf = jax.nn.log_sigmoid(gates[..., H:])               # log forget gate
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dhk->bshk", x, p["w_ogate"]))
+    return q, k, v, li, lf, o
+
+
+def mlstm_state_init(cfg: ModelConfig, batch, dtype=jnp.float32):
+    H = cfg.n_heads
+    dh = 2 * cfg.d_model // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), dtype),
+        "n": jnp.zeros((batch, H, dh), dtype),
+        "m": jnp.full((batch, H), -1e30, dtype),
+    }
+
+
+def mlstm_apply_seq(p, x, cfg: ModelConfig, state=None, chunk=64):
+    """Chunkwise-parallel mLSTM. x (B, S, D) -> (y (B, S, D), state)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    q, k, v, li, lf, o = _mlstm_qkv(p, x, cfg)
+    dh = q.shape[-1]
+    if state is None:
+        state = mlstm_state_init(cfg, B)
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+    rs = lambda t: jnp.moveaxis(t.reshape(B, nc, L, *t.shape[2:]), 1, 0)
+    qs, ks_, vs, lis, lfs, = map(rs, (q, k, v, li, lf))
+
+    def chunk_body(carry, xs):
+        C, n, m_in = carry                                # (B,H,dh,dh) ...
+        qc, kc, vc, lic, lfc = xs                         # (B,L,H,*)
+        lic = jnp.moveaxis(lic, 1, 2)                     # (B,H,L)
+        lfc = jnp.moveaxis(lfc, 1, 2)
+        b = jnp.cumsum(lfc, axis=-1)                      # (B,H,L) decay-from-start
+        a = lic - b                                       # log(i_j / decay_j)
+        g = jnp.maximum(m_in[..., None], jax.lax.cummax(a, axis=a.ndim - 1))
+        # intra-chunk weights w[t, j] = exp(a_j - g_t) for j <= t
+        w = jnp.exp(a[..., None, :] - g[..., :, None])    # (B,H,L,L)
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        w = jnp.where(causal, w, 0.0)
+        qkt = jnp.einsum("blhk,bjhk->bhlj", qc, kc).astype(jnp.float32)
+        sc = qkt * w                                      # (B,H,L,L)
+        inter = jnp.exp(m_in[..., None] - g)              # (B,H,L)
+        num = (jnp.einsum("bhlj,bjhk->blhk", sc.astype(vc.dtype), vc)
+               + jnp.einsum("blhk,bhkv,bhl->blhv", qc.astype(jnp.float32),
+                            C, inter).astype(vc.dtype))
+        # normalizer n_t^T q_t = sum_j w_tj (k_j . q_t)  [already in sc]
+        nq = (sc.sum(-1)
+              + jnp.einsum("bhk,blhk,bhl->bhl", n,
+                           qc.astype(jnp.float32), inter))
+        m_t = b + g                                       # (B,H,L)
+        den = jnp.maximum(jnp.abs(nq), jnp.exp(-m_t)) + 1e-6
+        h = num / jnp.moveaxis(den, 1, 2)[..., None].astype(num.dtype)
+        # chunk-end state
+        g_out = g[..., -1]
+        wout = jnp.exp(a - g_out[..., None])              # (B,H,L)
+        C_new = (C * jnp.exp(m_in - g_out)[..., None, None]
+                 + jnp.einsum("bhl,blhk,blhv->bhkv", wout,
+                              kc.astype(jnp.float32), vc.astype(jnp.float32)))
+        n_new = (n * jnp.exp(m_in - g_out)[..., None]
+                 + jnp.einsum("bhl,blhk->bhk", wout, kc.astype(jnp.float32)))
+        m_new = b[..., -1] + g_out
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(
+        chunk_body, (state["C"], state["n"], state["m"]),
+        (qs, ks_, vs, lis, lfs))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, dh)
+    y = (o * h).reshape(B, S, -1) @ p["out_proj"]
+    return y, {"C": C, "n": n, "m": m}
+
+
+def mlstm_apply_step(p, x1, cfg: ModelConfig, state):
+    """x1 (B, 1, D) single decode step (exact per-step recurrence)."""
+    q, k, v, li, lf, o = _mlstm_qkv(p, x1, cfg)
+    q, k, v, o = (t[:, 0].astype(jnp.float32) for t in (q, k, v, o))
+    li, lf = li[:, 0], lf[:, 0]                           # (B,H)
+    C, n, m_in = state["C"], state["n"], state["m"]
+    m_t = jnp.maximum(lf + m_in, li)
+    fp = jnp.exp(lf + m_in - m_t)
+    ip = jnp.exp(li - m_t)
+    C = C * fp[..., None, None] + ip[..., None, None] * (
+        k[..., :, None] * v[..., None, :])                # (B,H,dh,dh)
+    n = n * fp[..., None] + ip[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs((n * q).sum(-1)), jnp.exp(-m_t)) + 1e-6
+    h = (o * (num / den[..., None]))[:, None]             # (B,1,H,dh)
+    y = h.reshape(*x1.shape[:2], -1).astype(x1.dtype) @ p["out_proj"]
+    return y, {"C": C, "n": n, "m": m_t}
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    ks = jax.random.split(key, 8)
+    p = {}
+    for i, g in enumerate("zifo"):
+        p[f"w_{g}"] = dense_init(ks[i], (D, H, dh), dtype)
+        p[f"r_{g}"] = dense_init(ks[4 + i], (H, dh, dh), dtype)
+        p[f"b_{g}"] = (jnp.full((H, dh), 3.0, jnp.float32) if g == "f"
+                       else jnp.zeros((H, dh), jnp.float32))
+    return p
+
+
+def slstm_state_init(cfg: ModelConfig, batch, dtype=jnp.float32):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), dtype)
+    return {"c": z, "n": z + 1e-6, "h": z, "m": jnp.full((batch, H, dh), -1e30, dtype)}
+
+
+def _slstm_cell(p, xw, state):
+    """xw: dict g -> (B, H, dh) pre-activations from the input path."""
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    pre = {g: (xw[g]
+               + jnp.einsum("bhk,hkj->bhj", h, p[f"r_{g}"].astype(jnp.float32))
+               + p[f"b_{g}"]) for g in "zifo"}
+    z = jnp.tanh(pre["z"])
+    o = jax.nn.sigmoid(pre["o"])
+    li, lf = pre["i"], jax.nn.log_sigmoid(pre["f"])
+    m_t = jnp.maximum(lf + m, li)
+    ip = jnp.exp(li - m_t)
+    fp = jnp.exp(lf + m - m_t)
+    c = fp * c + ip * z
+    n = fp * n + ip
+    h = o * c / (jnp.abs(n) + 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_t}
+
+
+def slstm_apply_seq(p, x, cfg: ModelConfig, state=None):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    if state is None:
+        state = slstm_state_init(cfg, B)
+    xw = {g: jnp.einsum("bsd,dhk->bshk", x, p[f"w_{g}"]).astype(jnp.float32)
+          for g in "zifo"}
+
+    def body(st, xs):
+        st = _slstm_cell(p, xs, st)
+        return st, st["h"]
+
+    state, hs = jax.lax.scan(
+        body, state, {g: jnp.moveaxis(xw[g], 1, 0) for g in "zifo"})
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, D).astype(x.dtype)
+    return y, state
+
+
+def slstm_apply_step(p, x1, cfg: ModelConfig, state):
+    xw = {g: jnp.einsum("bsd,dhk->bshk", x1, p[f"w_{g}"])[:, 0].astype(jnp.float32)
+          for g in "zifo"}
+    state = _slstm_cell(p, xw, state)
+    y = state["h"].reshape(x1.shape[0], 1, -1).astype(x1.dtype)
+    return y, state
+
+
+# --------------------------------------------------------------------------
+# Mamba (S6)
+# --------------------------------------------------------------------------
+
+
+def _mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = int(s.expand * cfg.d_model)
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return di, dt_rank, s.d_state, s.d_conv
+
+
+def mamba_init(key, cfg: ModelConfig, dtype):
+    di, dt_rank, ds, dc = _mamba_dims(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (dc, di), dtype, scale_axis=dc),
+        "x_proj": dense_init(ks[2], (di, dt_rank + 2 * ds), dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, di), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (di,),
+                                       minval=math.log(1e-3),
+                                       maxval=math.log(1e-1))))),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[0], (di, cfg.d_model), dtype),
+    }
+
+
+def mamba_state_init(cfg: ModelConfig, batch, dtype=jnp.float32):
+    di, _, ds, dc = _mamba_dims(cfg)
+    return {"h": jnp.zeros((batch, di, ds), dtype),
+            "conv": jnp.zeros((batch, dc - 1, di), dtype)}
+
+
+def _mamba_ssm_inputs(p, xz, cfg):
+    di, dt_rank, ds, _ = _mamba_dims(cfg)
+    x, z = xz[..., :di], xz[..., di:]
+    dbc = x @ p["x_proj"]
+    dt = jax.nn.softplus(dbc[..., :dt_rank] @ p["dt_proj"]
+                         + p["dt_bias"]).astype(jnp.float32)   # (B,S,di)
+    Bm = dbc[..., dt_rank:dt_rank + ds].astype(jnp.float32)    # (B,S,ds)
+    Cm = dbc[..., dt_rank + ds:].astype(jnp.float32)
+    A = -jnp.exp(p["a_log"])                                   # (di,ds)
+    a_bar = jnp.exp(dt[..., None] * A)                         # (B,S,di,ds)
+    b_x = (dt * x.astype(jnp.float32))[..., None] * Bm[..., None, :]
+    return x, z, a_bar, b_x, Cm
+
+
+def mamba_apply_seq(p, xin, cfg: ModelConfig, state=None):
+    B, S, D = xin.shape
+    di, _, ds, dc = _mamba_dims(cfg)
+    if state is None:
+        state = mamba_state_init(cfg, B)
+    xz = aconstrain(xin @ p["in_proj"], "batch", None, "tensor")
+    x_part = xz[..., :di]
+    # depthwise causal conv over time, seeded with the conv ring state
+    xpad = jnp.concatenate([state["conv"].astype(xz.dtype), x_part], axis=1)
+    idx = jnp.arange(S)[:, None] + jnp.arange(dc)[None, :]     # (S, dc)
+    windows = xpad[:, idx]                                     # (B,S,dc,di)
+    xc = jax.nn.silu(jnp.einsum("bswd,wd->bsd", windows, p["conv_w"]))
+    xz = jnp.concatenate([xc, xz[..., di:]], axis=-1)
+    x, z, a_bar, b_x, Cm = _mamba_ssm_inputs(p, xz, cfg)
+    # prepend carried state as step 0 with a=1
+    a_all = jnp.concatenate(
+        [jnp.ones((B, 1, di, ds), jnp.float32), a_bar], axis=1)
+    b_all = jnp.concatenate([state["h"][:, None].astype(jnp.float32), b_x],
+                            axis=1)
+
+    def combine(lhs, rhs):
+        (al, bl), (ar, br) = lhs, rhs
+        return al * ar, bl * ar + br
+
+    _, hs = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
+    hs = hs[:, 1:]                                             # (B,S,di,ds)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cm)
+    y = y + p["d_skip"] * x.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(xin.dtype)
+    new_state = {"h": hs[:, -1], "conv": xpad[:, -(dc - 1):].astype(jnp.float32)}
+    return y @ p["out_proj"], new_state
+
+
+def mamba_apply_step(p, x1, cfg: ModelConfig, state):
+    B = x1.shape[0]
+    di, _, ds, dc = _mamba_dims(cfg)
+    xz = x1 @ p["in_proj"]                                     # (B,1,2di)
+    x_part = xz[..., :di]
+    xpad = jnp.concatenate([state["conv"].astype(xz.dtype), x_part], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bwd,wd->bd", xpad, p["conv_w"]))[:, None]
+    xz = jnp.concatenate([xc, xz[..., di:]], axis=-1)
+    x, z, a_bar, b_x, Cm = _mamba_ssm_inputs(p, xz, cfg)
+    h = state["h"].astype(jnp.float32) * a_bar[:, 0] + b_x[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None]
+    y = y + p["d_skip"] * x.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x1.dtype)
+    return y @ p["out_proj"], {"h": h, "conv": xpad[:, 1:].astype(jnp.float32)}

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adafactor, adamw, adamw8bit, make_optimizer, sgd,
+    clip_by_global_norm, warmup_cosine, global_norm)

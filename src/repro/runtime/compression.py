@@ -1,0 +1,54 @@
+"""Gradient compression for cross-pod all-reduce (int8 + error feedback).
+
+On the multi-pod mesh the data-parallel gradient reduction crosses the pod
+boundary (DCN/ICI-limited). Quantizing gradients to int8 with per-tensor
+absmax scales cuts that traffic 4x vs fp32 (2x vs bf16); the residual is fed
+back into the next step's gradient (error feedback) so the compression error
+stays bounded instead of accumulating.
+
+Usage inside a jitted train step:
+    g_q, scale = compress(grads)
+    g_q = psum-like reduction of g_q ...      (cheap int math)
+    grads = decompress(g_q, scale, n_shards)
+Here we expose the codec + an error-feedback wrapper; the train step applies
+it around its pod-axis reduction when cfg.grad_compression == 'int8'.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(tree):
+    def q(x):
+        xf = x.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-20
+        return jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8), scale
+    flat = jax.tree_util.tree_map(q, tree)
+    istup = lambda t: isinstance(t, tuple)
+    qs = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=istup)
+    scales = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=istup)
+    return qs, scales
+
+
+def decompress(qs, scales, dtype=jnp.float32):
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(dtype) * s.astype(dtype), qs, scales)
+
+
+def with_error_feedback(grads, residual):
+    """Add carried residual, compress, and return (decompressed grads as the
+    values actually applied, new residual). Simulates the codec locally; the
+    distributed reduction happens on the int8 payload."""
+    if residual is None:
+        residual = jax.tree_util.tree_map(
+            lambda g: jnp.zeros_like(g, jnp.float32), grads)
+    corrected = jax.tree_util.tree_map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    qs, scales = compress(corrected)
+    deq = decompress(qs, scales)
+    new_residual = jax.tree_util.tree_map(
+        lambda c, d: c - d, corrected, deq)
+    deq = jax.tree_util.tree_map(lambda d, g: d.astype(g.dtype), deq, grads)
+    return deq, new_residual

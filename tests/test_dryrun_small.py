@@ -1,0 +1,81 @@
+"""Dry-run machinery internals (pure functions; the compile-path is covered
+by tests/test_distributed.py::test_dryrun_cell_small_mesh)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.dryrun import _shape_bytes, model_flops, parse_collectives
+from repro.models.sharding import Rules, legalize_spec
+
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[16,1024]{1,0} all-gather(bf16[1,1024]{1,0} %p0), dims={0}
+  %ar = f32[4,4096]{1,0} all-reduce(f32[4,4096]{1,0} %p1), to_apply=%sum
+  %rs = f32[2,8]{1,0} reduce-scatter(f32[2,128]{1,0} %p2), dimensions={1}
+  %cp = bf16[8]{0} collective-permute(bf16[8]{0} %p3), source_target_pairs={{0,1}}
+  %ags = (f32[32,32]{1,0}, f32[1,1]) all-gather-start(f32[2,32]{1,0} %p4)
+  %not_a_coll = f32[7]{0} add(f32[7]{0} %a, f32[7]{0} %b)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,1024]") == 16 * 1024 * 2
+    assert _shape_bytes("f32[4,4096]") == 4 * 4096 * 4
+    assert _shape_bytes("pred[8]") == 8
+    assert _shape_bytes("weird[3]") == 0
+
+
+def test_parse_collectives():
+    out = parse_collectives(HLO)
+    assert out["all-gather"]["count"] == 2
+    assert out["all-gather"]["bytes"] == 16 * 1024 * 2 + (32 * 32 + 1) * 4
+    assert out["all-reduce"]["count"] == 1
+    assert out["all-reduce"]["bytes"] == 4 * 4096 * 4 * 2  # x2 ring phases
+    assert out["reduce-scatter"]["count"] == 1
+    assert out["collective-permute"]["bytes"] == 8 * 2
+    assert out["total_bytes"] == sum(
+        v["bytes"] for k, v in out.items() if isinstance(v, dict))
+
+
+def _mesh22():
+    return jax.make_mesh((2, 2), ("data", "model"),
+                         devices=jax.devices() * 4
+                         if len(jax.devices()) < 4 else jax.devices()[:4])
+
+
+def test_legalize_drops_indivisible():
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices() * 4)[:4].reshape(2, 2), ("data", "model"))
+    # divisible: kept
+    spec = legalize_spec(P("data", "model"), (8, 6), mesh)
+    assert spec == P("data", "model")
+    # indivisible head dim: DROPPED, not shifted onto head_dim
+    spec = legalize_spec(P("data", "model", None), (8, 5, 64), mesh)
+    assert spec == P("data", None, None)
+    # tuple axes (combined size 4)
+    spec = legalize_spec(P(("data", "model"),), (6,), mesh)
+    assert spec == P(None)
+    spec = legalize_spec(P(("data", "model"),), (16,), mesh)
+    assert spec == P(("data", "model"))
+
+
+def test_model_flops_dense_and_moe():
+    from repro.configs import load_config
+    from repro.configs.base import SHAPES
+    cfg = load_config("starcoder2-3b", smoke=True)
+    mf_train = model_flops(cfg, SHAPES["train_4k"])
+    mf_decode = model_flops(cfg, SHAPES["decode_32k"])
+    assert mf_train > 0 and mf_decode > 0
+    # train multiplies by 6 and by seq_len x batch tokens
+    tokens_train = 4096 * 256
+    tokens_decode = 128
+    assert mf_train / mf_decode == pytest.approx(
+        3 * tokens_train / tokens_decode)
+    # MoE counts only active experts
+    moe = load_config("deepseek-moe-16b", smoke=True)
+    mf_moe = model_flops(moe, SHAPES["decode_32k"])
+    assert mf_moe > 0

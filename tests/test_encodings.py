@@ -1,0 +1,100 @@
+"""Encoding correctness: paper Table 1 exact values + property tests."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encodings import (avss_max_lut, avss_sum_lut, avss_word_luts,
+                                  make_encoding)
+
+TABLE1_MTMC = ["00000", "00001", "00011", "00111", "01111", "11111", "11112",
+               "11122", "11222", "12222", "22222", "22223", "22233", "22333",
+               "23333", "33333"]
+TABLE1_B4E = ["00", "01", "02", "03", "10", "11", "12", "13", "20", "21",
+              "22", "23", "30", "31", "32", "33"]
+
+
+def codes_str(enc, v):
+    return "".join(str(int(c)) for c in np.asarray(enc.encode(jnp.asarray(v))))
+
+
+def test_table1_mtmc_cl5():
+    enc = make_encoding("mtmc", 5)
+    assert enc.levels == 16
+    for v, expect in enumerate(TABLE1_MTMC):
+        assert codes_str(enc, v) == expect, v
+
+
+def test_table1_b4e_cl2():
+    enc = make_encoding("b4e", 2)
+    assert enc.levels == 16
+    for v, expect in enumerate(TABLE1_B4E):
+        assert codes_str(enc, v) == expect, v
+
+
+def test_b4we_lengths():
+    # paper: B4WE data points are code word lengths 1, 5, 21
+    assert make_encoding("b4we", 1).length == 1
+    assert make_encoding("b4we", 2).length == 5
+    assert make_encoding("b4we", 3).length == 21
+
+
+@pytest.mark.parametrize("name,cl", [("mtmc", 3), ("mtmc", 8), ("mtmc", 32),
+                                     ("b4e", 2), ("b4e", 4), ("sre", 5),
+                                     ("b4we", 3)])
+def test_decode_roundtrip(name, cl):
+    enc = make_encoding(name, cl)
+    v = jnp.arange(min(enc.levels, 256))
+    assert (enc.decode(enc.encode(v)) == v).all()
+
+
+@given(cl=st.integers(2, 24), a=st.integers(0, 200), b=st.integers(0, 200))
+@settings(max_examples=100, deadline=None)
+def test_mtmc_thermometer_l1_identity(cl, a, b):
+    """L1 distance in MTMC code space == L1 distance in value space."""
+    enc = make_encoding("mtmc", cl)
+    a, b = a % enc.levels, b % enc.levels
+    ca = np.asarray(enc.encode(jnp.asarray(a)))
+    cb = np.asarray(enc.encode(jnp.asarray(b)))
+    assert np.abs(ca - cb).sum() == abs(a - b)
+
+
+@given(cl=st.integers(2, 16), a=st.integers(0, 100), b=st.integers(0, 100))
+@settings(max_examples=100, deadline=None)
+def test_mtmc_bottleneck_property(cl, a, b):
+    """Paper Sec 3.1: |a-b| < CL  =>  max per-word mismatch <= 1."""
+    enc = make_encoding("mtmc", cl)
+    a, b = a % enc.levels, b % enc.levels
+    if abs(a - b) < cl:
+        ca = np.asarray(enc.encode(jnp.asarray(a)))
+        cb = np.asarray(enc.encode(jnp.asarray(b)))
+        assert np.abs(ca - cb).max() <= 1
+
+
+def test_b4e_small_distance_can_mismatch3():
+    """Fig. 3(b): B4E produces mismatch-3 even for close values."""
+    enc = make_encoding("b4e", 3)
+    ca = np.asarray(enc.encode(jnp.asarray(15)))   # 033
+    cb = np.asarray(enc.encode(jnp.asarray(16)))   # 100
+    assert np.abs(ca - cb).max() == 3 and abs(15 - 16) == 1
+
+
+@given(cl=st.integers(2, 16), q=st.integers(0, 3), v=st.integers(0, 100))
+@settings(max_examples=100, deadline=None)
+def test_avss_identity(cl, q, v):
+    """AVSS summed mismatch for MTMC == |CL*q - v| (DESIGN.md; enables the
+    MXU LUT formulation)."""
+    enc = make_encoding("mtmc", cl)
+    v = v % enc.levels
+    lut = avss_sum_lut(enc)
+    assert lut[q, v] == abs(cl * q - v)
+
+
+def test_avss_max_lut_bounds():
+    enc = make_encoding("mtmc", 8)
+    mx = avss_max_lut(enc)
+    assert mx.min() >= 0 and mx.max() <= 3
+    # exact match of scaled query value -> max mismatch <= 1
+    for q in range(4):
+        assert mx[q, 8 * q] <= 1

@@ -1,0 +1,77 @@
+"""Fault-tolerance runtime + gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.compression import compress, decompress, with_error_feedback
+from repro.runtime.ft import (AnomalyConfig, AnomalyDetector, StepWatchdog,
+                              skip_or_apply)
+
+
+def test_anomaly_detector_skips_nan_and_spikes():
+    det = AnomalyDetector(AnomalyConfig(spike_factor=5.0, warmup_steps=5))
+    for i in range(10):
+        assert det.check(1.0, 1.0 + 0.01 * i)
+    assert not det.check(float("nan"), 1.0)
+    assert not det.check(1.0, 100.0)      # spike
+    assert det.check(1.0, 1.1)            # back to normal
+    assert not det.should_restart
+
+
+def test_anomaly_restart_signal():
+    det = AnomalyDetector(AnomalyConfig(max_skips_in_row=3, warmup_steps=0,
+                                        spike_factor=2.0))
+    det.check(1.0, 1.0)
+    for _ in range(3):
+        det.check(1.0, 1e9)
+    assert det.should_restart
+
+
+def test_skip_or_apply():
+    old = {"w": jnp.zeros((3,))}
+    new = {"w": jnp.ones((3,))}
+    np.testing.assert_array_equal(
+        np.asarray(skip_or_apply(jnp.bool_(True), new, old)["w"]), 1.0)
+    np.testing.assert_array_equal(
+        np.asarray(skip_or_apply(jnp.bool_(False), new, old)["w"]), 0.0)
+
+
+def test_watchdog_flags_sustained_slowdown():
+    import time
+    dog = StepWatchdog(slow_factor=3.0, patience=2)
+    for _ in range(3):
+        dog.start(); time.sleep(0.002); dog.stop()
+    assert not dog.straggling
+    for _ in range(2):
+        dog.start(); time.sleep(0.03); dog.stop()
+    assert dog.straggling
+
+
+def test_compression_roundtrip_error():
+    g = {"a": jax.random.normal(jax.random.PRNGKey(0), (512,)),
+         "b": jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 10}
+    qs, scales = compress(g)
+    back = decompress(qs, scales)
+    for k in g:
+        err = np.abs(np.asarray(back[k] - g[k])).max()
+        assert err <= np.abs(np.asarray(g[k])).max() / 127 + 1e-7
+
+
+def test_error_feedback_reduces_bias():
+    """With error feedback, the accumulated applied updates track the true
+    gradient sum much closer than independent quantization."""
+    key = jax.random.PRNGKey(0)
+    true_sum = jnp.zeros((256,))
+    applied_ef = jnp.zeros((256,))
+    residual = None
+    for i in range(50):
+        g = {"g": jax.random.normal(jax.random.fold_in(key, i), (256,))
+             * 0.001 + 0.01}
+        true_sum = true_sum + g["g"]
+        deq, residual = with_error_feedback(g, residual)
+        applied_ef = applied_ef + deq["g"]
+    err = float(jnp.abs(applied_ef - true_sum).max())
+    # residual carries at most one step's quantization error
+    one_step_err = 0.02 / 127
+    assert err < 5 * one_step_err

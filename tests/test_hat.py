@@ -1,0 +1,111 @@
+"""Hardware-aware training: STE gradients, asymmetric QAT, learnability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hat
+from repro.core.avss import SearchConfig
+from repro.core.hat import HATConfig, meta_loss, mtmc_word_ste, simulate_mcam, ste_step
+from repro.core.mcam import MCAMConfig
+from repro.core.quantization import fake_quant, QuantSpec, quantize_asymmetric, ste_round
+
+
+def test_ste_round_gradient_is_identity():
+    g = jax.grad(lambda x: jnp.sum(ste_round(x) * 3.0))(jnp.array([0.2, 1.7]))
+    np.testing.assert_allclose(np.asarray(g), [3.0, 3.0])
+
+
+def test_ste_step_sigmoid_gradient():
+    f = lambda x: ste_step(x, 0.1).sum()
+    y = ste_step(jnp.array([-1.0, 0.5]), 0.1)
+    np.testing.assert_array_equal(np.asarray(y), [0.0, 1.0])
+    g = jax.grad(f)(jnp.array([0.0]))
+    np.testing.assert_allclose(np.asarray(g), [0.25 / 0.1], rtol=1e-5)
+
+
+def test_mtmc_word_ste_forward_exact_backward_slope():
+    cl = 8
+    v = jnp.arange(25, dtype=jnp.float32)
+    from repro.core.encodings import make_encoding
+    enc = make_encoding("mtmc", cl)
+    hard = np.asarray(enc.encode(v.astype(jnp.int32)))
+    for c in range(cl):
+        word = mtmc_word_ste(v, c, cl)
+        np.testing.assert_array_equal(np.asarray(word), hard[:, c])
+        g = jax.grad(lambda x: mtmc_word_ste(x, c, cl).sum())(v)
+        np.testing.assert_allclose(np.asarray(g), 1.0 / cl)
+
+
+def test_asymmetric_quant_levels():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (64,))
+    s = jax.random.normal(jax.random.PRNGKey(1), (256,))
+    qq, qs = quantize_asymmetric(q, s, support_levels=25)
+    assert np.asarray(qq).max() <= 3 and np.asarray(qq).min() >= 0
+    assert np.asarray(qs).max() <= 24 and np.asarray(qs).min() >= 0
+    assert len(np.unique(np.asarray(qs))) > 4  # finer support grid
+
+
+def test_simulate_mcam_gradients_nonzero():
+    hcfg = HATConfig(search=SearchConfig(encoding="mtmc", cl=4, mode="avss"))
+    B, N, dim, nway = 4, 10, 12, 5
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, dim))
+    s = jax.random.normal(jax.random.PRNGKey(1), (N, dim))
+    labels = jnp.arange(N) % nway
+
+    def loss(q, s):
+        sc = simulate_mcam(q, s, labels, nway, hcfg, jax.random.PRNGKey(2))
+        return hat.cross_entropy(sc / hcfg.temperature,
+                                 jnp.zeros((B,), jnp.int32))
+
+    gq, gs = jax.grad(loss, argnums=(0, 1))(q, s)
+    assert float(jnp.linalg.norm(gq)) > 0
+    assert float(jnp.linalg.norm(gs)) > 0
+
+
+def test_hat_training_improves_episode_accuracy():
+    """Meta-training a linear controller THROUGH the noisy MCAM simulator
+    improves held-out episode accuracy (HAT learns hardware-robust
+    features). Measured on fixed eval episodes: ~0.73 -> ~0.88."""
+    hcfg = HATConfig(search=SearchConfig(
+        encoding="mtmc", cl=4, mode="avss",
+        mcam=MCAMConfig(sigma_device=0.3, sigma_read=0.1)))
+    dim, nway, kshot, nq = 6, 4, 4, 16
+    centers = jax.random.normal(jax.random.PRNGKey(0), (nway, 16))
+    W0 = jax.random.normal(jax.random.PRNGKey(1), (16, dim)) * 0.02
+    apply_fn = lambda p, x: jax.nn.relu(x @ p)
+
+    def episode(key):
+        ks, kq = jax.random.split(key)
+        s_lab = jnp.repeat(jnp.arange(nway), kshot)
+        q_lab = jnp.repeat(jnp.arange(nway), nq // nway)
+        s_x = centers[s_lab] + 0.8 * jax.random.normal(ks, (len(s_lab), 16))
+        q_x = centers[q_lab] + 0.8 * jax.random.normal(kq, (len(q_lab), 16))
+        return s_x, s_lab, q_x, q_lab
+
+    def loss_fn(W, ep, key):
+        s_x, s_lab, q_x, q_lab = ep
+        sc = simulate_mcam(apply_fn(W, q_x), apply_fn(W, s_x), s_lab, nway,
+                           hcfg, key)
+        return hat.cross_entropy(sc / hcfg.temperature, q_lab)
+
+    def accuracy(W, ep, key):
+        s_x, s_lab, q_x, q_lab = ep
+        sc = simulate_mcam(apply_fn(W, q_x), apply_fn(W, s_x), s_lab, nway,
+                           hcfg, key)
+        return float((jnp.argmax(sc, -1) == q_lab).mean())
+
+    evals = [episode(jax.random.PRNGKey(5000 + i)) for i in range(8)]
+    eval_all = lambda W: np.mean(
+        [accuracy(W, e, jax.random.PRNGKey(77)) for e in evals])
+    jgrad = jax.jit(jax.value_and_grad(loss_fn))
+    before = eval_all(W0)
+    w, m = W0, jnp.zeros_like(W0)
+    for i in range(60):
+        _, g = jgrad(w, episode(jax.random.PRNGKey(100 + i)),
+                     jax.random.PRNGKey(i))
+        m = 0.9 * m + g
+        w = w - 0.05 * m
+    after = eval_all(w)
+    assert after > before + 0.05, (before, after)

@@ -1,0 +1,79 @@
+"""MCAM behavioural model: bottleneck ordering, monotonicity, noise."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mcam
+from repro.core.mcam import MCAMConfig
+
+
+def test_current_monotone_in_total_mismatch():
+    cfg = MCAMConfig()
+    # strings with s cells at mismatch-1, rest 0
+    cur = []
+    for s in range(0, 24):
+        cells = jnp.array([1.0] * s + [0.0] * (24 - s))
+        cur.append(float(mcam.string_current(cells[None], cfg)[0]))
+    assert all(a > b for a, b in zip(cur, cur[1:]))
+
+
+def test_bottleneck_ordering_fig2c():
+    """Same total mismatch (6): six 1s > three 2s > two 3s (Fig. 2(c))."""
+    cfg = MCAMConfig()
+    mk = lambda lv, n: jnp.array([float(lv)] * n + [0.0] * (24 - n))[None]
+    i1 = float(mcam.string_current(mk(1, 6), cfg)[0])
+    i2 = float(mcam.string_current(mk(2, 3), cfg)[0])
+    i3 = float(mcam.string_current(mk(3, 2), cfg)[0])
+    assert i1 > i2 > i3
+
+
+def test_single_mismatch3_dominates():
+    """One mismatch-3 cell sinks the string below many mismatch-1 cells."""
+    cfg = MCAMConfig()
+    many_small = jnp.array([1.0] * 20 + [0.0] * 4)[None]
+    one_big = jnp.array([3.0] + [0.0] * 23)[None]
+    i_small = float(mcam.string_current(many_small, cfg)[0])
+    i_big = float(mcam.string_current(one_big, cfg)[0])
+    assert i_big < i_small
+
+
+def test_thresholds_sorted_in_range():
+    cfg = MCAMConfig(n_thresholds=8)
+    th = cfg.thresholds()
+    assert len(th) == 8
+    assert (np.diff(th) > 0).all()
+    assert th.max() < 1.0 and th.min() > 0.0
+
+
+def test_sa_votes_monotone():
+    cfg = MCAMConfig()
+    th = jnp.asarray(cfg.thresholds())
+    cur = jnp.linspace(0.01, 1.0, 50)
+    votes = np.asarray(mcam.sa_votes(cur, cfg, th))
+    assert (np.diff(votes) >= 0).all()
+    assert votes.max() == cfg.n_thresholds
+
+
+def test_hash_noise_deterministic_and_distributed():
+    a = mcam.hash_normal(jnp.arange(10000, dtype=jnp.uint32), seed=7)
+    b = mcam.hash_normal(jnp.arange(10000, dtype=jnp.uint32), seed=7)
+    c = mcam.hash_normal(jnp.arange(10000, dtype=jnp.uint32), seed=8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.allclose(np.asarray(a), np.asarray(c))
+    arr = np.asarray(a)
+    assert abs(arr.mean()) < 0.05 and abs(arr.std() - 1.0) < 0.05
+
+
+def test_device_noise_perturbs_current():
+    cfg = MCAMConfig(sigma_device=0.2, sigma_read=0.05)
+    cells = jnp.ones((4, 24))
+    idx = jnp.arange(4, dtype=jnp.uint32)
+    noisy = mcam.string_current(cells, cfg, noise_idx=(idx,))
+    clean = mcam.string_current(cells, cfg)
+    assert not np.allclose(np.asarray(noisy), np.asarray(clean))
+    # noise is zero-centred-ish: mean over many strings near clean value
+    cells = jnp.ones((4096, 24))
+    idx = jnp.arange(4096, dtype=jnp.uint32)
+    noisy = mcam.string_current(cells, cfg, noise_idx=(idx,))
+    assert abs(float(noisy.mean()) - float(clean[0])) < 0.05
