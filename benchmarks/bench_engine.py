@@ -1,0 +1,84 @@
+"""Retrieval-engine throughput: full vs two-phase vs sharded two-phase.
+
+Rows compare the three RetrievalEngine paths at a serving-shaped store
+(N supports, B queries) plus backend variants of the shortlist. NOTE: on
+this CPU container the Pallas rows measure the INTERPRETER; relative
+ordering of ref-vs-two-phase and the sharded scaling shape are the signal,
+not absolute wall-times (the TPU-side analysis lives in the roofline).
+
+Run standalone for a multi-device sharded row:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.run --only engine
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from benchmarks.common import time_us
+from repro.core.avss import SearchConfig
+from repro.core.mcam import MCAMConfig
+from repro.engine import RetrievalEngine
+
+N, B, D, K = 2048, 16, 48, 64
+
+
+def run():
+    rows = []
+    cfg = SearchConfig("mtmc", cl=8, mode="avss", mcam=MCAMConfig(),
+                       use_kernel="ref")
+    enc = cfg.enc
+    sv = jax.random.randint(jax.random.PRNGKey(0), (N, D), 0, enc.levels)
+    qv = jax.random.randint(jax.random.PRNGKey(1), (B, D), 0, 4)
+
+    def qps(us):
+        return f"qps={B / us * 1e6:.0f}"
+
+    # full exact search (reference backend)
+    eng_ref = RetrievalEngine(cfg, backend="ref")
+    f_full = jax.jit(lambda q, s: eng_ref.full(q, s)["votes"])
+    us_full, votes_full = time_us(f_full, qv, sv, iters=2)
+    rows.append((f"engine/full_N{N}", us_full, qps(us_full) + ";backend=ref"))
+
+    # two-phase: MXU shortlist + exact rescore, per shortlist backend
+    votes_tp = {}
+    for backend in ("ref", "mxu", "fused"):
+        eng = RetrievalEngine(cfg, backend=backend)
+        f_tp = jax.jit(lambda q, s, e=eng: e.two_phase(q, s, k=K)["votes"])
+        us_tp, votes_tp[backend] = time_us(f_tp, qv, sv, iters=3)
+        rows.append((f"engine/two_phase_k{K}_{backend}", us_tp,
+                     qps(us_tp) + f";speedup_vs_full={us_full / us_tp:.1f}x"))
+    for backend in ("mxu", "fused"):  # backends must agree bit-exactly
+        np.testing.assert_array_equal(np.asarray(votes_tp["ref"]),
+                                      np.asarray(votes_tp[backend]))
+
+    # sharded two-phase over every local device (1 on a plain CPU run;
+    # launch with XLA_FLAGS=--xla_force_host_platform_device_count=8 to see
+    # the multi-shard shape)
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    svs = jax.device_put(sv, NamedSharding(mesh, P("data")))
+    eng = RetrievalEngine(cfg, backend="ref")
+    with mesh:
+        f_sh = jax.jit(lambda q, s: eng.sharded_two_phase(
+            q, s, mesh, axes=("data",), k=K)["votes"])
+        us_sh, votes_sh = time_us(f_sh, qv, svs, iters=3)
+    rows.append((f"engine/sharded_two_phase_k{K}_dev{n_dev}", us_sh,
+                 qps(us_sh) + f";shards={n_dev}"))
+    np.testing.assert_array_equal(np.asarray(votes_tp["ref"]),
+                                  np.asarray(votes_sh))
+
+    # two-phase recall@k of the 1-NN decision vs the full search
+    from repro.core import avss as avss_lib
+    full = eng_ref.full(qv, sv)
+    full_best = np.asarray(avss_lib.best_support(full))
+    tp = eng_ref.two_phase(qv, sv, k=K)
+    best = np.asarray(avss_lib.best_support(tp))
+    tp_best = np.asarray(tp["indices"])[np.arange(B), best]
+    rows.append((f"engine/two_phase_recall_k{K}", 0.0,
+                 f"recall={float((full_best == tp_best).mean()):.2f}"))
+    return rows

@@ -9,6 +9,7 @@ Suites:
   table2   SVSS vs AVSS accuracy + throughput (bench_avss)
   fig9     energy-accuracy Pareto fronts (bench_pareto)
   kernel   Pallas kernels + two-phase recall (bench_kernels)
+  engine   retrieval engine: full vs two-phase vs sharded (bench_engine)
   roofline dry-run derived roofline terms (benchmarks.roofline; needs the
            dryrun sweep artifacts under results/dryrun)
 """
@@ -24,6 +25,7 @@ SUITES = {
     "table2": "benchmarks.bench_avss",
     "fig9": "benchmarks.bench_pareto",
     "kernel": "benchmarks.bench_kernels",
+    "engine": "benchmarks.bench_engine",
     "roofline": "benchmarks.roofline",
 }
 

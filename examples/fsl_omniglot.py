@@ -36,7 +36,15 @@ def embed_apply(params, images):
     return apply_conv4(params, images)
 
 
-def evaluate(params, sampler, search_cfg, episodes=6):
+def evaluate(params, sampler, search_cfg, episodes=6, backend="auto",
+             two_phase=False, k=64):
+    """Episode accuracy through the unified retrieval engine.
+
+    two_phase=True evaluates the production serving path (MXU shortlist +
+    exact noisy rescore) instead of the full search -- accuracies match
+    whenever the 1-NN makes the shortlist (recall@k, see bench_engine)."""
+    from repro.engine import RetrievalEngine
+    engine = RetrievalEngine(search_cfg, backend=backend)
     accs = []
     for e in range(episodes):
         ep = sampler.episode(1000 + e)
@@ -47,9 +55,16 @@ def evaluate(params, sampler, search_cfg, episodes=6):
         else:
             sv, _, rng = fake_quant(s_emb, QuantSpec(search_cfg.enc.levels))
             qv, _, _ = fake_quant(q_emb, QuantSpec(search_cfg.enc.levels), rng)
-        res = avss_lib.search_quantized(qv.astype(jnp.int32),
-                                        sv.astype(jnp.int32), search_cfg)
-        pred = avss_lib.predict_1nn(res, jnp.asarray(ep.support_labels))
+        qv, sv = qv.astype(jnp.int32), sv.astype(jnp.int32)
+        s_lab = jnp.asarray(ep.support_labels)
+        if two_phase:
+            res = engine.two_phase(qv, sv, k=k)
+            best = avss_lib.best_support(res)
+            nn = jnp.take_along_axis(res["indices"], best[:, None], 1)[:, 0]
+            pred = s_lab[nn]
+        else:
+            res = engine.full(qv, sv)
+            pred = avss_lib.predict_1nn(res, s_lab)
         accs.append(float((pred == jnp.asarray(ep.query_labels)).mean()))
     return float(np.mean(accs)), float(np.std(accs))
 
@@ -124,6 +139,12 @@ def main():
     ap.add_argument("--n-way", type=int, default=8)
     ap.add_argument("--full", action="store_true",
                     help="paper geometry (200-way 10-shot, CL=32); slow")
+    ap.add_argument("--engine-backend", default="auto",
+                    choices=["auto", "ref", "pallas", "mxu", "fused"])
+    ap.add_argument("--two-phase-eval", action="store_true",
+                    help="evaluate via the two-phase engine path "
+                         "(shortlist + exact rescore) instead of full search")
+    ap.add_argument("--shortlist-k", type=int, default=64)
     args = ap.parse_args()
 
     fsl = get_config() if args.full else get_smoke_config()
@@ -158,13 +179,17 @@ def main():
         for enc_name, ecl in [("mtmc", cl), ("b4e", 3), ("sre", 4)]:
             cfg = SearchConfig(enc_name, cl=ecl, mode="avss", mcam=mcam,
                                use_kernel="ref")
-            acc, sd = evaluate(params, sampler, cfg)
+            acc, sd = evaluate(params, sampler, cfg,
+                               backend=args.engine_backend,
+                               two_phase=args.two_phase_eval,
+                               k=args.shortlist_k)
             results[(label, enc_name)] = acc
             print(f"  {label:4s} {enc_name:5s} AVSS: {acc:.3f} +- {sd:.3f}")
     for mode in ("svss", "avss"):
         cfg = SearchConfig("mtmc", cl=cl, mode=mode, mcam=mcam,
                            use_kernel="ref")
-        acc, sd = evaluate(params_hat, sampler, cfg)
+        acc, sd = evaluate(params_hat, sampler, cfg,
+                           backend=args.engine_backend)
         print(f"  HAT  mtmc {mode.upper()}: {acc:.3f} +- {sd:.3f}")
 
     d_hat = results[("HAT", "mtmc")] - results[("std", "mtmc")]

@@ -144,40 +144,10 @@ def search_quantized(q_values: jax.Array, s_values: jax.Array,
     Returns dict with votes (B, N), dist (B, N) (ideal digital distance) and
     iterations (python int).
     """
-    enc = cfg.enc
-    sl = cfg.mcam.string_len
-    d = q_values.shape[-1]
-    s_grid = layout_support(s_values, enc, sl)
-    q_grid = layout_query(q_values, enc, cfg.mode, sl)
-    weights = enc.weights_array()
-    thresholds = jnp.asarray(cfg.mcam.thresholds())
-
-    if cfg.use_kernel in ("pallas", "mxu") or (
-            cfg.use_kernel == "auto" and _kernel_available()):
-        from repro.kernels import ops as kernel_ops  # local import: optional dep
-        votes, dist = kernel_ops.mcam_search(
-            q_grid, s_grid, weights, cfg, thresholds)
-    else:
-        fn = partial(_search_one_query, weights=weights, cfg=cfg,
-                     thresholds=thresholds)
-        qidx = jnp.arange(q_grid.shape[0], dtype=jnp.uint32)
-        votes, dist = jax.lax.map(
-            lambda args: fn(args[0], s_grid, args[1]), (q_grid, qidx),
-            batch_size=min(cfg.query_chunk, q_grid.shape[0]))
-
-    return {
-        "votes": votes,
-        "dist": dist,
-        "iterations": search_iterations(d, enc, cfg.mode, sl),
-    }
-
-
-def _kernel_available() -> bool:
-    try:
-        from repro.kernels import ops  # noqa: F401
-        return True
-    except Exception:
-        return False
+    # Dispatch lives in the engine layer (repro/engine); this wrapper keeps
+    # the historical API for callers that think in terms of raw searches.
+    from repro.engine import RetrievalEngine
+    return RetrievalEngine(cfg).full(q_values, s_values)
 
 
 # ---------------------------------------------------------------------------
@@ -186,13 +156,27 @@ def _kernel_available() -> bool:
 
 
 def score_supports(result: dict[str, jax.Array]) -> jax.Array:
-    """Votes with infinitesimal ideal-distance tie-breaking. (B, N)."""
+    """Votes with infinitesimal ideal-distance tie-breaking. (B, N).
+
+    NOTE: only suitable where a scalar score is needed (class-vote SUMS in
+    class_scores / HAT's CE loss). For ranking use best_support: the 1e-6
+    epsilon falls below the f32 ulp once votes reach ~16, so argmax over
+    this score silently loses the distance tie-break."""
     return result["votes"] - 1e-6 * result["dist"]
+
+
+def best_support(result: dict[str, jax.Array]) -> jax.Array:
+    """Argmax by (votes desc, ideal distance asc, index asc) -- the paper's
+    retrieval rule with the vote tie EXACTLY broken by digital distance.
+    Works on full (B, N) results and two-phase (B, k) candidate results."""
+    votes, dist = result["votes"], result["dist"]
+    top = votes.max(axis=-1, keepdims=True)
+    return jnp.argmin(jnp.where(votes == top, dist, jnp.inf), axis=-1)
 
 
 def predict_1nn(result: dict[str, jax.Array], labels: jax.Array) -> jax.Array:
     """Label of the most-similar support (the paper's retrieval rule)."""
-    return labels[jnp.argmax(score_supports(result), axis=-1)]
+    return labels[best_support(result)]
 
 
 def class_scores(result: dict[str, jax.Array], labels: jax.Array,

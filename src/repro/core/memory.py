@@ -45,9 +45,16 @@ def init_memory(cfg: MemoryConfig) -> dict:
 
 def calibrate(state: dict, vectors: jax.Array, cfg: MemoryConfig) -> dict:
     """Set the quantization range from a sample of embeddings (std clipping,
-    paper Sec. 3.3). Must run before the first write."""
+    paper Sec. 3.3). Must run before the first write.
+
+    The std range is clamped to the observed data extent, matching
+    quantization.clip_range: one-sided distributions (post-ReLU controller
+    embeddings) would otherwise spend half of the query's 4 levels on an
+    empty half-range."""
     mu, sd = vectors.mean(), vectors.std() + 1e-8
-    return {**state, "lo": mu - cfg.clip_std * sd, "hi": mu + cfg.clip_std * sd}
+    lo = jnp.maximum(mu - cfg.clip_std * sd, vectors.min())
+    hi = jnp.minimum(mu + cfg.clip_std * sd, vectors.max() + 1e-8)
+    return {**state, "lo": lo, "hi": hi}
 
 
 def _quantize(x, levels, lo, hi):
@@ -79,16 +86,26 @@ def quantize_queries(state: dict, queries: jax.Array) -> jax.Array:
 
 
 def search(state: dict, queries: jax.Array, cfg: MemoryConfig,
-           two_phase: bool = False, k: int = 64) -> dict:
-    """AVSS over the whole store. queries: (B, dim) float embeddings."""
+           two_phase: bool = False, k: int = 64,
+           engine: "RetrievalEngine | None" = None) -> dict:
+    """AVSS over the whole store. queries: (B, dim) float embeddings.
+
+    Pass `engine` to reuse a configured RetrievalEngine (backend choice);
+    by default one is built from cfg.search.
+    """
+    from repro.engine import RetrievalEngine
+    eng = engine or RetrievalEngine(cfg.search)
     q = quantize_queries(state, queries)
     if two_phase:
-        res = kernel_ops.two_phase_search(q, state["values"], cfg.search, k=k)
+        # mask unwritten slots out of the phase-1 shortlist; same expression
+        # as distributed_search so the two paths stay bit-identical
+        res = eng.two_phase(q, state["values"], k=k,
+                            valid=state["labels"] >= 0)
         valid = res["indices"] < state["size"]
         votes = jnp.where(valid, res["votes"], -jnp.inf)
         labels = jnp.where(valid, state["labels"][res["indices"]], -1)
         return {**res, "votes": votes, "labels": labels}
-    res = avss_lib.search_quantized(q, state["values"], cfg.search)
+    res = eng.full(q, state["values"])
     slot = jnp.arange(cfg.capacity)
     votes = jnp.where(slot[None, :] < state["size"], res["votes"], -jnp.inf)
     return {**res, "votes": votes,
@@ -96,10 +113,10 @@ def search(state: dict, queries: jax.Array, cfg: MemoryConfig,
 
 
 def predict(result: dict) -> jax.Array:
-    """1-NN label prediction from a (two-phase or full) search result."""
-    score = result["votes"] - 1e-6 * jnp.where(
-        jnp.isfinite(result["votes"]), result["dist"], 0.0)
-    best = jnp.argmax(score, axis=-1)
+    """1-NN label prediction from a (two-phase, full, or distributed) search
+    result: max votes, vote ties broken exactly by the ideal digital
+    distance (avss.best_support); masked slots carry -inf votes and lose."""
+    best = avss_lib.best_support(result)
     return jnp.take_along_axis(result["labels"], best[:, None], 1)[:, 0]
 
 
@@ -124,39 +141,32 @@ def shard_state(state: dict, mesh, axes) -> dict:
 
 
 def distributed_search(state: dict, queries: jax.Array, cfg: MemoryConfig,
-                       mesh, axes=("data", "model"), k: int = 16) -> dict:
-    """Block-parallel AVSS: each shard searches its rows with the MXU LUT
-    kernel-equivalent einsum, local top-k, then a global top-k after
-    all-gathering the (tiny) candidate sets. Collective volume is
-    O(B * k * shards), independent of capacity."""
-    from jax.experimental.shard_map import shard_map
-    enc = cfg.search.enc
+                       mesh, axes=("data", "model"), k: int = 16,
+                       exact: bool = True) -> dict:
+    """Block-parallel AVSS over the row-sharded store.
+
+    exact=True (default, paper-faithful): each shard shortlists its rows on
+    the MXU, runs the exact noisy vote rescore on its local candidates
+    (global indices feed the noise counters), and the candidate sets are
+    all-gathered and merged -- votes bit-identical to the single-device
+    `search(..., two_phase=True)` for every shortlisted support.
+
+    exact=False: ideal-digital-distance only (votes = -dist), the cheapest
+    serving path. Either way, collective volume is O(B * k * shards),
+    independent of capacity.
+    """
+    from repro.engine import sharded as sharded_lib
     q = quantize_queries(state, queries)
+    if exact:
+        # mask unwritten slots out of the phase-1 shortlist (labels, like
+        # values, are row-sharded; < 0 marks an unwritten slot)
+        res = sharded_lib.sharded_two_phase_search(
+            q, state["values"], cfg.search, mesh, axes=axes, k=k,
+            valid=state["labels"] >= 0)
+        valid = res["indices"] < state["size"]
+        votes = jnp.where(valid, res["votes"], -jnp.inf)
+        labels = jnp.where(valid, state["labels"][res["indices"]], -1)
+        return {**res, "votes": votes, "labels": labels}
     qrows = kernel_ops.query_onehot(q, jnp.float32)        # (B, 4d) replicated
-
-    def local(qr, proj, labels):
-        # proj: (N_loc, 4d); ideal digital distance on local rows
-        dist = qr @ proj.astype(jnp.float32).T             # (B, N_loc)
-        dist = jnp.where(labels[None, :] < 0, jnp.inf, dist)  # empty slots
-        kk = min(k, proj.shape[0])
-        neg, idx = jax.lax.top_k(-dist, kk)
-        cand_lab = labels[idx]                             # (B, kk)
-        # gather candidates from every shard
-        ax = axes[0] if len(axes) == 1 else axes
-        d_all = jax.lax.all_gather(-neg, ax, tiled=False)  # (S, B, kk) or nested
-        l_all = jax.lax.all_gather(cand_lab, ax, tiled=False)
-        d_all = d_all.reshape(-1, *neg.shape)              # (S, B, kk)
-        l_all = l_all.reshape(-1, *neg.shape)
-        d_flat = jnp.moveaxis(d_all, 0, 1).reshape(neg.shape[0], -1)
-        l_flat = jnp.moveaxis(l_all, 0, 1).reshape(neg.shape[0], -1)
-        best = jnp.argsort(d_flat, axis=-1)[:, :k]
-        return (jnp.take_along_axis(d_flat, best, 1),
-                jnp.take_along_axis(l_flat, best, 1))
-
-    dist, labels = shard_map(
-        local, mesh=mesh,
-        in_specs=(P(), P(axes), P(axes)),
-        out_specs=(P(), P()),
-        check_rep=False,
-    )(qrows, state["proj"], state["labels"])
-    return {"dist": dist, "labels": labels, "votes": -dist}
+    return sharded_lib.sharded_ideal_search(
+        qrows, state["proj"], state["labels"], mesh, axes=axes, k=k)

@@ -1,0 +1,28 @@
+"""Unified retrieval engine: one API over the ref / Pallas / MXU-LUT backends.
+
+`RetrievalEngine` is the single dispatch point for every search path in the
+framework (the `use_kernel` branching formerly inlined in `core/avss.py`,
+`core/memory.py` and `kernels/ops.py`):
+
+  full                exact noisy MCAM search over the whole store
+  two_phase           MXU shortlist by ideal digital distance + exact noisy
+                      rescore of the top-k candidates
+  sharded_two_phase   the same two-phase pipeline with the store row-sharded
+                      over mesh axes -- votes bit-identical to the
+                      single-device two_phase for every shortlisted support
+"""
+
+from repro.engine.backends import (BACKENDS, kernels_available,
+                                   resolve_backend)
+from repro.engine.engine import RetrievalEngine
+from repro.engine.sharded import (sharded_ideal_search,
+                                  sharded_two_phase_search)
+
+__all__ = [
+    "BACKENDS",
+    "RetrievalEngine",
+    "kernels_available",
+    "resolve_backend",
+    "sharded_ideal_search",
+    "sharded_two_phase_search",
+]

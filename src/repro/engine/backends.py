@@ -1,0 +1,46 @@
+"""Backend registry and resolution for the retrieval engine.
+
+Backends (every one produces bit-identical results -- the choice is purely a
+performance/hardware decision, see the parity suite in tests/test_engine.py):
+
+  ref     pure-jnp reference (kernels/ref.py semantics); always available.
+  pallas  fused Pallas VPU search kernel (kernels/mcam_search.py) for the
+          full search; Pallas MXU LUT matmul for shortlists.
+  mxu     alias of `pallas` for the full search; for two-phase shortlists it
+          names the unfused LUT matmul + lax.top_k pipeline.
+  fused   two-phase shortlists via the fused distance+top-k Pallas kernel
+          (kernels/shortlist.py); full search as `pallas`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+BACKENDS = ("ref", "pallas", "mxu", "fused")
+KERNEL_BACKENDS = ("pallas", "mxu", "fused")
+
+
+@functools.cache
+def kernels_available() -> bool:
+    """True when the Pallas kernel package imports (optional dependency)."""
+    try:
+        from repro.kernels import ops  # noqa: F401
+        return True
+    except Exception:
+        return False
+
+
+def resolve_backend(backend: str = "auto", use_kernel: str = "auto") -> str:
+    """Resolve an engine-level override plus a SearchConfig preference.
+
+    `backend` (the engine's own setting) wins over `use_kernel` (the
+    SearchConfig field kept for backwards compatibility); "auto" defers.
+    """
+    for choice in (backend, use_kernel):
+        if choice != "auto":
+            if choice not in BACKENDS:
+                raise ValueError(
+                    f"unknown backend {choice!r}; expected one of "
+                    f"{BACKENDS + ('auto',)}")
+            return choice
+    return "pallas" if kernels_available() else "ref"

@@ -1,0 +1,163 @@
+"""The RetrievalEngine: one object, three search paths, three backends.
+
+All backends share one semantics contract (kernels/ref.py): for a given
+(SearchConfig, query batch, support store) the votes and distances are
+bit-identical regardless of backend or sharding. Two facts make this cheap
+to guarantee:
+
+* Phase-1 shortlist distances are integer-valued: AVSS LUT entries are small
+  integers, query one-hots are 0/1, and every backend accumulates in f32
+  (exact for integers < 2**24), so the shortlist distance is the same exact
+  float no matter how the reduction is ordered or which unit computes it.
+* Phase-2 noise is a counter-based hash of ABSOLUTE (query, string, cell)
+  coordinates, so the noisy rescore of a support does not depend on which
+  shard or kernel tile evaluates it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import avss as avss_lib
+from repro.core import encodings as enc_lib
+from repro.core.avss import SearchConfig
+from repro.engine.backends import resolve_backend
+from repro.kernels import ref as ref_kernels
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalEngine:
+    """Dispatches AVSS/SVSS searches to a selected backend.
+
+    cfg:      the end-to-end search configuration (encoding, MCAM physics,
+              noise). `cfg.use_kernel` is honoured as a fallback preference.
+    backend:  'auto' | 'ref' | 'pallas' | 'mxu' | 'fused'; overrides
+              cfg.use_kernel when not 'auto'.
+    """
+
+    cfg: SearchConfig
+    backend: str = "auto"
+
+    @property
+    def resolved_backend(self) -> str:
+        return resolve_backend(self.backend, self.cfg.use_kernel)
+
+    # -- phase-0 helpers ---------------------------------------------------
+
+    def _grids(self, q_values: jax.Array, s_values: jax.Array):
+        cfg = self.cfg
+        enc = cfg.enc
+        sl = cfg.mcam.string_len
+        s_grid = avss_lib.layout_support(s_values, enc, sl)
+        q_grid = avss_lib.layout_query(q_values, enc, cfg.mode, sl)
+        return q_grid, s_grid, enc.weights_array(), \
+            jnp.asarray(cfg.mcam.thresholds())
+
+    def _iterations(self, d: int) -> int:
+        cfg = self.cfg
+        return avss_lib.search_iterations(d, cfg.enc, cfg.mode,
+                                          cfg.mcam.string_len)
+
+    # -- full exact search -------------------------------------------------
+
+    def full(self, q_values: jax.Array, s_values: jax.Array
+             ) -> dict[str, jax.Array]:
+        """Exact noisy MCAM search of every store row.
+
+        q_values: (B, d) ints -- in [0, 4) for AVSS, [0, levels) for SVSS.
+        s_values: (N, d) ints in [0, levels).
+        Returns {votes (B, N), dist (B, N), iterations}.
+        """
+        cfg = self.cfg
+        q_grid, s_grid, weights, thresholds = self._grids(q_values, s_values)
+        if self.resolved_backend == "ref":
+            fn = partial(avss_lib._search_one_query, weights=weights,
+                         cfg=cfg, thresholds=thresholds)
+            qidx = jnp.arange(q_grid.shape[0], dtype=jnp.uint32)
+            votes, dist = jax.lax.map(
+                lambda args: fn(args[0], s_grid, args[1]), (q_grid, qidx),
+                batch_size=min(cfg.query_chunk, q_grid.shape[0]))
+        else:  # pallas / mxu / fused all use the fused VPU search kernel
+            from repro.kernels import ops as kernel_ops
+            votes, dist = kernel_ops.mcam_search(
+                q_grid, s_grid, weights, cfg, thresholds)
+        return {"votes": votes, "dist": dist,
+                "iterations": self._iterations(q_values.shape[-1])}
+
+    # -- phase-1 shortlist -------------------------------------------------
+
+    def shortlist(self, q_values: jax.Array, s_values: jax.Array, k: int,
+                  valid: jax.Array | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+        """Top-k supports by ideal digital AVSS distance.
+
+        Returns (dist (B, k), indices (B, k)), ranked by (distance, index)
+        lexicographically ascending -- identical across backends, including
+        tie handling (distances are integer-valued, see module docstring).
+
+        valid: optional (N,) bool mask; masked rows get the integer-exact
+        SHORTLIST_MASK_PENALTY added to their distance, so they rank after
+        every valid row (and keep their relative order, preserving backend
+        and sharding bit-parity). Their returned dist includes the penalty.
+        """
+        from repro.kernels import ops as kernel_ops
+        cfg = self.cfg
+        assert cfg.mode == "avss", "shortlists use the AVSS LUT"
+        k = min(k, s_values.shape[0])
+        backend = self.resolved_backend
+        if backend == "fused":
+            return kernel_ops.lut_shortlist(q_values, s_values, cfg.enc, k,
+                                            valid=valid)
+        if backend == "ref":
+            lut = jnp.asarray(enc_lib.avss_sum_lut(cfg.enc), jnp.float32)
+            dist = ref_kernels.avss_dist_ref(q_values, s_values, lut)
+        else:  # pallas / mxu: LUT matmul kernel
+            dist = kernel_ops.avss_ideal_dist(q_values, s_values, cfg.enc)
+        if valid is not None:
+            dist = dist + jnp.where(valid, 0.0,
+                                    kernel_ops.SHORTLIST_MASK_PENALTY)[None]
+        neg, idx = jax.lax.top_k(-dist, k)
+        return -neg, idx
+
+    # -- two-phase search --------------------------------------------------
+
+    def two_phase(self, q_values: jax.Array, s_values: jax.Array,
+                  k: int = 64, valid: jax.Array | None = None
+                  ) -> dict[str, jax.Array]:
+        """Shortlist + exact noisy rescore (beyond-paper TPU pipeline).
+
+        Returns {votes (B, k), dist (B, k) ideal shortlist distances
+        (masked rows carry the mask penalty), indices (B, k) global support
+        rows, iterations}. Votes are bit-identical to `full` for every
+        support that makes the shortlist.
+        """
+        from repro.kernels import ops as kernel_ops
+        cfg = self.cfg
+        dist, idx = self.shortlist(q_values, s_values, k, valid=valid)
+        q_grid, s_grid, weights, thresholds = self._grids(q_values, s_values)
+        votes = kernel_ops.rescore_shortlist(
+            q_grid, s_grid, idx, weights, cfg, thresholds)
+        return {"votes": votes, "dist": dist, "indices": idx,
+                "iterations": self._iterations(q_values.shape[-1])}
+
+    # -- sharded two-phase search -------------------------------------------
+
+    def sharded_two_phase(self, q_values: jax.Array, s_values: jax.Array,
+                          mesh, axes=("data",), k: int = 64,
+                          valid: jax.Array | None = None
+                          ) -> dict[str, jax.Array]:
+        """Two-phase search with the store row-sharded over mesh `axes`.
+
+        Bit-identical to `two_phase` on a single device: each shard
+        shortlists its rows, rescores its local candidates with GLOBAL
+        support indices feeding the noise counters, and the candidate sets
+        are all-gathered and merged by (distance, global index). See
+        repro/engine/sharded.py for the exactness argument.
+        """
+        from repro.engine import sharded
+        return sharded.sharded_two_phase_search(
+            q_values, s_values, self.cfg, mesh, axes=axes, k=k, valid=valid)

@@ -1,0 +1,160 @@
+"""Sharded retrieval: block-parallel search over a row-sharded store.
+
+Two flavours:
+
+  sharded_two_phase_search   per-shard MXU shortlist + exact noisy rescore,
+                             then all-gather + global top-k merge. Votes are
+                             BIT-IDENTICAL to the single-device two-phase.
+  sharded_ideal_search       ideal-digital-distance only (the cheap serving
+                             path formerly inlined in core/memory.py).
+
+Exactness argument for the two-phase path (verified by
+tests/test_engine.py::test_sharded_two_phase_bit_identical):
+
+* Shortlist distances are integer-valued f32 (AVSS LUT entries are small
+  integers, one-hot queries are 0/1, f32 accumulation is exact below 2**24),
+  so every shard computes the same exact distance a single device would.
+* `jax.lax.top_k` ranks by (value, index): a support in the GLOBAL top-k is
+  necessarily in its shard's LOCAL top-k under the same order, so no global
+  candidate is lost by local pruning.
+* The all-gather stacks shards in mesh-axis-major order -- the same order a
+  row-sharded array is laid out in -- so a STABLE argsort over the gathered
+  distances resolves ties by ascending global support index, exactly like
+  single-device top_k.
+* The rescore feeds GLOBAL support indices to the noise counters, so the
+  noisy vote of support n for query b is the same number on every shard.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import avss as avss_lib
+from repro.core.avss import SearchConfig
+
+
+def _shard_index(mesh, axes) -> jax.Array:
+    """Row-major linear index of this shard over `axes` (inside shard_map)."""
+    shard = jnp.int32(0)
+    for a in axes:
+        shard = shard * jnp.int32(mesh.shape[a]) \
+            + jax.lax.axis_index(a).astype(jnp.int32)
+    return shard
+
+
+def _gather_candidates(x: jax.Array, axes) -> jax.Array:
+    """(B, kk) per-shard -> (B, S * kk) shard-major (ascending global rows)."""
+    ax = axes[0] if len(axes) == 1 else tuple(axes)
+    stacked = jax.lax.all_gather(x, ax, tiled=False).reshape(-1, *x.shape)
+    return jnp.moveaxis(stacked, 0, 1).reshape(x.shape[0], -1)
+
+
+def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
+                             cfg: SearchConfig, mesh, axes=("data",),
+                             k: int = 64, valid: jax.Array | None = None
+                             ) -> dict[str, jax.Array]:
+    """Two-phase AVSS over a store row-sharded on `axes`.
+
+    q_values: (B, d) ints in [0, 4), replicated.
+    s_values: (N, d) ints, row-sharded (N divisible by the shard count).
+    valid: optional (N,) bool, row-sharded like s_values; masked rows get
+    the integer-exact SHORTLIST_MASK_PENALTY on their phase-1 distance.
+    Returns {votes (B, k), dist (B, k), indices (B, k) global rows,
+    iterations} -- bit-identical to RetrievalEngine.two_phase(q, s, k,
+    valid) on a single device.
+    """
+    from jax.experimental.shard_map import shard_map
+    from repro.kernels import ops as kernel_ops
+
+    assert cfg.mode == "avss", "two-phase search shortlists with the AVSS LUT"
+    enc = cfg.enc
+    sl = cfg.mcam.string_len
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    N = s_values.shape[0]
+    assert N % n_shards == 0, (
+        f"store rows ({N}) must divide evenly over {n_shards} shards")
+    k = min(k, N)
+    k_loc = min(k, N // n_shards)
+
+    q1h = kernel_ops.query_onehot(q_values, jnp.float32)       # (B, 4d)
+    q_grid = avss_lib.layout_query(q_values, enc, "avss", sl)
+    weights = enc.weights_array()
+    thresholds = jnp.asarray(cfg.mcam.thresholds())
+    # LUT built eagerly OUTSIDE the shard_map trace (it is a compile-time
+    # constant of the encoding) and closed over by the local function.
+    from repro.core.encodings import avss_sum_lut
+    lut = jnp.asarray(avss_sum_lut(enc), jnp.float32)          # (4, levels)
+    if valid is None:
+        # keep the shard_map arity fixed; +0.0 is exact, parity unaffected
+        valid = jnp.ones((N,), bool)
+
+    def local(q1h_, q_grid_, s_loc, valid_loc):
+        offset = _shard_index(mesh, axes) * jnp.int32(s_loc.shape[0])
+        # phase 1 on local rows: exact integer-valued distances on the MXU
+        # (same LUT projection as kernels/ops.support_projection)
+        proj = lut.T[s_loc].reshape(s_loc.shape[0], -1)        # (N_loc, 4d)
+        dist = q1h_ @ proj.T                                   # (B, N_loc)
+        dist = dist + jnp.where(valid_loc, 0.0,
+                                kernel_ops.SHORTLIST_MASK_PENALTY)[None]
+        neg, idx_loc = jax.lax.top_k(-dist, k_loc)
+        gidx = idx_loc + offset
+        # phase 2 on local candidates, GLOBAL indices for the noise counters
+        s_grid_loc = avss_lib.layout_support(s_loc, enc, sl)
+        votes = kernel_ops.rescore_shortlist(
+            q_grid_, s_grid_loc, idx_loc, weights, cfg, thresholds,
+            noise_idx=gidx)
+        # merge: stable sort by distance == (distance, global row) order
+        d_all = _gather_candidates(-neg, axes)
+        v_all = _gather_candidates(votes, axes)
+        i_all = _gather_candidates(gidx, axes)
+        order = jnp.argsort(d_all, axis=-1, stable=True)[:, :k]
+        take = lambda x: jnp.take_along_axis(x, order, axis=1)
+        return take(v_all), take(d_all), take(i_all)
+
+    votes, dist, indices = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(), P(axes), P(axes)),
+        out_specs=(P(), P(), P()),
+        check_rep=False,
+    )(q1h, q_grid, s_values, valid)
+    return {"votes": votes, "dist": dist, "indices": indices,
+            "iterations": avss_lib.search_iterations(
+                q_values.shape[-1], enc, "avss", sl)}
+
+
+def sharded_ideal_search(q_onehot: jax.Array, proj: jax.Array,
+                         labels: jax.Array, mesh, axes=("data",),
+                         k: int = 16) -> dict[str, jax.Array]:
+    """Ideal-digital-distance block search (no rescore; cheap serving path).
+
+    q_onehot: (B, 4d) replicated query one-hots; proj: (N, 4d) row-sharded
+    LUT projections; labels: (N,) row-sharded (< 0 marks empty slots).
+    Collective volume is O(B * k * shards), independent of capacity.
+    Returns {dist, votes=-dist, labels, indices} each (B, k').
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def local(qr, proj_loc, labels_loc):
+        offset = _shard_index(mesh, axes) * jnp.int32(proj_loc.shape[0])
+        dist = qr @ proj_loc.astype(jnp.float32).T             # (B, N_loc)
+        dist = jnp.where(labels_loc[None, :] < 0, jnp.inf, dist)
+        kk = min(k, proj_loc.shape[0])
+        neg, idx = jax.lax.top_k(-dist, kk)
+        d_all = _gather_candidates(-neg, axes)
+        l_all = _gather_candidates(labels_loc[idx], axes)
+        i_all = _gather_candidates(idx + offset, axes)
+        order = jnp.argsort(d_all, axis=-1, stable=True)[:, :k]
+        take = lambda x: jnp.take_along_axis(x, order, axis=1)
+        return take(d_all), take(l_all), take(i_all)
+
+    dist, labels_out, indices = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(axes), P(axes)),
+        out_specs=(P(), P(), P()),
+        check_rep=False,
+    )(q_onehot, proj, labels)
+    return {"dist": dist, "labels": labels_out, "votes": -dist,
+            "indices": indices}

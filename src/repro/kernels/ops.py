@@ -126,12 +126,17 @@ def avss_ideal_dist(q_values: jax.Array, s_values: jax.Array, enc: Encoding,
 
 def rescore_shortlist(q_grid: jax.Array, s_grid: jax.Array,
                       short_idx: jax.Array, weights: jax.Array,
-                      cfg, thresholds: jax.Array) -> jax.Array:
+                      cfg, thresholds: jax.Array, *,
+                      noise_idx: jax.Array | None = None) -> jax.Array:
     """Exact noisy votes for per-query shortlists.
 
     q_grid (B, seg, Lq, sl); s_grid (N, seg, L, sl); short_idx (B, K).
     Uses GLOBAL support indices for the noise counters, so votes are
-    bit-identical to the full search. Returns votes (B, K).
+    bit-identical to the full search. When `s_grid` holds only a SHARD of
+    the store, pass `noise_idx` (B, K) with the global row of each
+    candidate while `short_idx` stays shard-local -- this is what makes the
+    sharded two-phase search bit-identical to the single-device one.
+    Returns votes (B, K).
     """
     L = s_grid.shape[2]
     q = flatten_strings(broadcast_query(q_grid, L))        # (B, S, sl)
@@ -140,7 +145,9 @@ def rescore_shortlist(q_grid: jax.Array, s_grid: jax.Array,
     sg = s[short_idx]                                      # (B, K, S, sl)
     m = jnp.abs(q[:, None].astype(jnp.int32) - sg.astype(jnp.int32))
     m = m.astype(jnp.float32)                              # (B, K, S, sl)
-    string_id = (short_idx.astype(jnp.uint32)[..., None] * jnp.uint32(S)
+    if noise_idx is None:
+        noise_idx = short_idx
+    string_id = (noise_idx.astype(jnp.uint32)[..., None] * jnp.uint32(S)
                  + jnp.arange(S, dtype=jnp.uint32)[None, None, :])
     b_idx = jnp.arange(B, dtype=jnp.uint32)[:, None, None]
     mc = cfg.mcam
@@ -166,18 +173,40 @@ def rescore_shortlist(q_grid: jax.Array, s_grid: jax.Array,
 
 def two_phase_search(q_values: jax.Array, s_values: jax.Array, cfg,
                      k: int = 64) -> dict[str, jax.Array]:
-    """Full beyond-paper pipeline. cfg: repro.core.avss.SearchConfig (avss)."""
-    from repro.core import avss as avss_lib
-    enc = cfg.enc
-    assert cfg.mode == "avss", "two-phase search shortlists with the AVSS LUT"
-    dist = avss_ideal_dist(q_values, s_values, enc)        # (B, N)
-    k = min(k, s_values.shape[0])
-    neg, idx = jax.lax.top_k(-dist, k)
-    sl = cfg.mcam.string_len
-    s_grid = avss_lib.layout_support(s_values, enc, sl)
-    q_grid = avss_lib.layout_query(q_values, enc, "avss", sl)
-    th = jnp.asarray(cfg.mcam.thresholds())
-    votes = rescore_shortlist(q_grid, s_grid, idx, enc.weights_array(), cfg, th)
-    return {"votes": votes, "dist": -neg, "indices": idx,
-            "iterations": avss_lib.search_iterations(
-                q_values.shape[-1], enc, "avss", sl)}
+    """Full beyond-paper pipeline. cfg: repro.core.avss.SearchConfig (avss).
+
+    Backwards-compatible wrapper; the pipeline now lives in
+    repro.engine.RetrievalEngine.two_phase (MXU shortlist backend).
+    """
+    from repro.engine import RetrievalEngine
+    return RetrievalEngine(cfg, backend="mxu").two_phase(
+        q_values, s_values, k=k)
+
+
+# Added to the phase-1 distance of masked-out support rows. A power of two,
+# so it is exact in bf16/f32; > any real LUT distance (3 * d * sum(weights)
+# stays far below 2**22 for every paper geometry) and small enough that
+# dist + penalty remains integer-exact in f32 (< 2**24). Ordering among
+# masked rows is preserved, so backend/sharding bit-parity survives masking.
+SHORTLIST_MASK_PENALTY = 2.0 ** 22
+
+
+def lut_shortlist(q_values: jax.Array, s_values: jax.Array, enc: Encoding,
+                  k: int, dtype=jnp.bfloat16, valid: jax.Array | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Fused shortlist: (B, k) distances + indices without materialising the
+    (B, N) distance matrix in HBM (kernels/shortlist.py).
+
+    valid: optional (N,) bool; invalid rows get SHORTLIST_MASK_PENALTY added
+    to their distance (folded into one extra LUT column so the kernel needs
+    no mask plumbing) and therefore sort after every valid row.
+    """
+    from repro.kernels import shortlist as shortlist_kernel
+    q1h = query_onehot(q_values, dtype)
+    sp = support_projection(s_values, enc, dtype)
+    if valid is not None:
+        ones = jnp.ones((q1h.shape[0], 1), q1h.dtype)
+        pen = jnp.where(valid, 0.0, SHORTLIST_MASK_PENALTY)[:, None]
+        q1h = jnp.concatenate([q1h, ones], axis=1)
+        sp = jnp.concatenate([sp, pen.astype(sp.dtype)], axis=1)
+    return shortlist_kernel.lut_shortlist_pallas(q1h, sp, k)

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: fused AVSS shortlist (LUT distance matmul + top-k).
+
+Phase 1 of the two-phase search normally materialises the full (B, N)
+distance matrix in HBM, then runs lax.top_k over it. This kernel fuses the
+two: the grid walks the support rows tile by tile, each step computes the
+(tile_b, tile_n) distance block on the MXU and folds it into a running
+per-query top-k buffer that lives in the (revisited) output block -- HBM
+traffic drops from O(B*N) to O(B*k + N*4d).
+
+Tie-breaking contract (bit-identical to jax.lax.top_k on -dist): candidates
+are ranked by (distance, support row) lexicographically ascending.
+Correctness of the streaming merge:
+
+* the running buffer is kept sorted in that order, and every buffered row
+  index is strictly smaller than any index in the incoming tile (the grid
+  walks rows in ascending order), so
+* k rounds of first-occurrence argmin extraction over [buffer | tile]
+  reproduce the global order exactly, ties included.
+
+The extraction is all vector ops (min / compare / cumsum / where) -- no
+gather, scatter or sort -- so it maps onto the VPU; cost is k passes over a
+(tile_b, k + tile_n) block per tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_B = 8
+DEFAULT_TILE_N = 512
+_IDX_SENTINEL = 2**30  # pads the buffer before k finite candidates exist
+
+
+def _shortlist_kernel(q_ref, s_ref, d_ref, i_ref, *, k: int, tile_n: int,
+                      n_real: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        d_ref[...] = jnp.full_like(d_ref, jnp.inf)
+        i_ref[...] = jnp.full_like(i_ref, jnp.int32(_IDX_SENTINEL))
+
+    # (tile_b, tile_n) distance block on the MXU; f32 accumulation is exact
+    # for the integer-valued LUT entries.
+    dist = jax.lax.dot_general(
+        q_ref[...], s_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_abs = (j * tile_n
+             + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1))
+    dist = jnp.where(n_abs < n_real, dist, jnp.inf)  # padded support rows
+
+    cand_d = jnp.concatenate([d_ref[...], dist], axis=1)   # (tb, k + tn)
+    cand_i = jnp.concatenate([i_ref[...], n_abs], axis=1)
+    col = jax.lax.broadcasted_iota(jnp.int32, d_ref.shape, 1)  # (tb, k)
+
+    def extract(t, carry):
+        cand_d, out_d, out_i = carry
+        best = jnp.min(cand_d, axis=1, keepdims=True)      # (tb, 1)
+        hit = cand_d == best
+        first = hit & (jnp.cumsum(hit.astype(jnp.int32), axis=1) == 1)
+        best_i = jnp.sum(jnp.where(first, cand_i, 0), axis=1, keepdims=True)
+        cand_d = jnp.where(first, jnp.inf, cand_d)
+        sel = col == t
+        return (cand_d,
+                jnp.where(sel, best, out_d),
+                jnp.where(sel, best_i, out_i))
+
+    zeros_d = jnp.zeros_like(d_ref)
+    zeros_i = jnp.zeros_like(i_ref)
+    _, out_d, out_i = jax.lax.fori_loop(
+        0, k, extract, (cand_d, zeros_d, zeros_i))
+    d_ref[...] = out_d
+    i_ref[...] = out_i
+
+
+def lut_shortlist_pallas(q_onehot: jax.Array, s_proj: jax.Array, k: int, *,
+                         tile_b: int = DEFAULT_TILE_B,
+                         tile_n: int = DEFAULT_TILE_N,
+                         interpret: bool | None = None
+                         ) -> tuple[jax.Array, jax.Array]:
+    """(B, 4d) one-hot queries x (N, 4d) LUT projections -> top-k shortlist.
+
+    Returns (dist (B, k) f32, indices (B, k) int32), ranked ascending by
+    (distance, support row) -- the exact order jax.lax.top_k(-dist) yields.
+    Requires k <= N.
+    """
+    B, K = q_onehot.shape
+    N, K2 = s_proj.shape
+    assert K == K2, (K, K2)
+    assert 0 < k <= N, (k, N)
+    tile_b = min(tile_b, B)
+    tile_n = min(tile_n, max(N, 1))
+    pad_b = (-B) % tile_b
+    pad_n = (-N) % tile_n
+    if pad_b:
+        q_onehot = jnp.pad(q_onehot, ((0, pad_b), (0, 0)))
+    if pad_n:
+        s_proj = jnp.pad(s_proj, ((0, pad_n), (0, 0)))
+    Bp, Np = B + pad_b, N + pad_n
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    grid = (Bp // tile_b, Np // tile_n)  # N axis innermost: sequential merge
+    kernel = functools.partial(_shortlist_kernel, k=k, tile_n=tile_n,
+                               n_real=N)
+    dist, idx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, K), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_b, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, k), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_onehot, s_proj)
+    return dist[:B], idx[:B]

@@ -192,6 +192,8 @@ def _metrics(compiled) -> dict:
     """Per-device flops/bytes + per-collective byte totals (UNcorrected:
     scan bodies counted once -- see _corrected_metrics)."""
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+        cost = cost[0] if cost else {}
     coll = parse_collectives(compiled.as_text())
     out = {"flops": float(cost.get("flops", 0.0)),
            "bytes": float(cost.get("bytes accessed", 0.0))}

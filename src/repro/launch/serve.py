@@ -22,7 +22,8 @@ from repro.models.sharding import Rules
 
 
 def serve(arch: str, smoke: bool, batch: int, steps: int, prompt_len: int,
-          retrieval: bool = False):
+          retrieval: bool = False, retrieval_mode: str = "two-phase",
+          retrieval_backend: str = "auto", retrieval_k: int = 32):
     cfg = load_config(arch, smoke=smoke)
     rules = Rules(batch=(), fsdp=(), tensor=(), expert=())
     params = tfm.init(jax.random.PRNGKey(0), cfg)
@@ -35,6 +36,7 @@ def serve(arch: str, smoke: bool, batch: int, steps: int, prompt_len: int,
         from repro.core import memory as mem
         from repro.core.avss import SearchConfig
         from repro.core.memory import MemoryConfig
+        from repro.engine import RetrievalEngine
         mem_cfg = MemoryConfig(capacity=1024, dim=min(48, cfg.d_model),
                                search=SearchConfig("mtmc", cl=8, mode="avss",
                                                    use_kernel="ref"))
@@ -44,8 +46,10 @@ def serve(arch: str, smoke: bool, batch: int, steps: int, prompt_len: int,
                                   cfg.vocab_size)
         mstate = mem.calibrate(mstate, vecs, mem_cfg)
         mstate = mem.write(mstate, vecs, toks, mem_cfg)
-        step_fn = jax.jit(steps_lib.make_serve_step_with_mcam(cfg, rules,
-                                                              mem_cfg))
+        engine = (RetrievalEngine(mem_cfg.search, backend=retrieval_backend)
+                  if retrieval_mode == "two-phase" else None)
+        step_fn = jax.jit(steps_lib.make_serve_step_with_mcam(
+            cfg, rules, mem_cfg, engine=engine, k=retrieval_k))
 
     key = jax.random.PRNGKey(1)
     tok = jax.random.randint(key, (batch, 1), 0, cfg.vocab_size)
@@ -78,9 +82,17 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--retrieval", action="store_true")
+    ap.add_argument("--retrieval-mode", default="two-phase",
+                    choices=["dense", "two-phase"],
+                    help="dense: softmax over the whole store; two-phase: "
+                         "engine shortlist + exact noisy rescore")
+    ap.add_argument("--retrieval-backend", default="auto",
+                    choices=["auto", "ref", "pallas", "mxu", "fused"])
+    ap.add_argument("--retrieval-k", type=int, default=32)
     args = ap.parse_args(argv)
     serve(args.arch, args.smoke, args.batch, args.steps, args.prompt_len,
-          args.retrieval)
+          args.retrieval, args.retrieval_mode, args.retrieval_backend,
+          args.retrieval_k)
 
 
 if __name__ == "__main__":

@@ -9,6 +9,10 @@ import textwrap
 
 import pytest
 
+# every test here pays a fresh subprocess jax init (~10s) plus multi-device
+# compiles -- full tier only
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -1,0 +1,277 @@
+"""Parity suite for the unified retrieval engine (repro/engine).
+
+Every backend and every sharding must produce BIT-IDENTICAL results -- the
+engine's contract is that backend choice is purely a performance decision.
+Exactness rests on (see repro/engine docstrings): integer-valued phase-1
+distances (exact in f32 under any reduction order), (distance, index)
+lexicographic ranking everywhere, and counter-based noise keyed on absolute
+(query, string, cell) coordinates.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import avss as avss_lib
+from repro.core.avss import SearchConfig
+from repro.core.mcam import MCAMConfig
+from repro.engine import RetrievalEngine, resolve_backend
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# Backend resolution.
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_backend_precedence():
+    assert resolve_backend("ref", "pallas") == "ref"   # engine overrides cfg
+    assert resolve_backend("auto", "ref") == "ref"     # cfg honoured on auto
+    assert resolve_backend("auto", "auto") in ("pallas", "ref")
+    with pytest.raises(ValueError):
+        resolve_backend("cuda")
+
+
+# ---------------------------------------------------------------------------
+# (a) Pallas full search == reference, across odd shapes.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,N,d", [
+    (5, 200, 50),   # B not a tile_b multiple, N crosses a tile_n boundary,
+                    # d not a string_len multiple (50 = 2*24 + 2)
+    (3, 37, 10),    # tiny everything
+    pytest.param(9, 130, 24, marks=pytest.mark.slow),  # d exactly 1 string
+    pytest.param(1, 16, 72, marks=pytest.mark.slow),   # 1 query, 3 strings
+])
+def test_full_search_pallas_matches_ref_odd_shapes(B, N, d):
+    cfg = SearchConfig("mtmc", cl=8, mode="avss", mcam=MCAMConfig(),
+                       use_kernel="ref")
+    sv = jax.random.randint(jax.random.PRNGKey(N), (N, d), 0, cfg.enc.levels)
+    qv = jax.random.randint(jax.random.PRNGKey(B), (B, d), 0, 4)
+    ref = RetrievalEngine(cfg, backend="ref").full(qv, sv)
+    pal = RetrievalEngine(cfg, backend="pallas").full(qv, sv)
+    np.testing.assert_array_equal(np.asarray(ref["votes"]),
+                                  np.asarray(pal["votes"]))
+    np.testing.assert_array_equal(np.asarray(ref["dist"]),
+                                  np.asarray(pal["dist"]))
+
+
+@pytest.mark.slow
+def test_full_search_pallas_matches_ref_svss():
+    cfg = SearchConfig("mtmc", cl=4, mode="svss", mcam=MCAMConfig(),
+                       use_kernel="ref")
+    sv = jax.random.randint(jax.random.PRNGKey(2), (33, 30), 0,
+                            cfg.enc.levels)
+    qv = jax.random.randint(jax.random.PRNGKey(3), (4, 30), 0,
+                            cfg.enc.levels)
+    ref = RetrievalEngine(cfg, backend="ref").full(qv, sv)
+    pal = RetrievalEngine(cfg, backend="pallas").full(qv, sv)
+    np.testing.assert_array_equal(np.asarray(ref["votes"]),
+                                  np.asarray(pal["votes"]))
+
+
+# ---------------------------------------------------------------------------
+# Two-phase backends agree bit-exactly; votes match the full search.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_two_phase_backends_bit_identical(quantized_store):
+    cfg, qv, sv = quantized_store
+    res = {b: RetrievalEngine(cfg, backend=b).two_phase(qv, sv, k=48)
+           for b in ("ref", "mxu", "fused")}
+    for b in ("mxu", "fused"):
+        for key in ("votes", "dist", "indices"):
+            np.testing.assert_array_equal(
+                np.asarray(res["ref"][key]), np.asarray(res[b][key]),
+                err_msg=f"{b}/{key}")
+
+
+@pytest.mark.slow
+def test_two_phase_votes_match_full_search(quantized_store):
+    cfg, qv, sv = quantized_store
+    eng = RetrievalEngine(cfg, backend="ref")
+    full = eng.full(qv, sv)
+    tp = eng.two_phase(qv, sv, k=48)
+    v_full = np.asarray(full["votes"])
+    idx = np.asarray(tp["indices"])
+    for b in range(qv.shape[0]):
+        np.testing.assert_array_equal(np.asarray(tp["votes"])[b],
+                                      v_full[b, idx[b]])
+
+
+def test_fused_shortlist_matches_topk_tie_heavy():
+    """The fused Pallas shortlist reproduces lax.top_k EXACTLY, including
+    tie order, on a store built almost entirely of duplicated rows."""
+    from repro.core.encodings import make_encoding
+    from repro.kernels import ops as kops
+    enc = make_encoding("mtmc", 8)
+    base = jax.random.randint(jax.random.PRNGKey(0), (8, 20), 0, enc.levels)
+    sv = jnp.concatenate([base] * 9, axis=0)               # 72 rows, 9x dups
+    qv = jax.random.randint(jax.random.PRNGKey(1), (5, 20), 0, 4)
+    q1h = kops.query_onehot(qv, jnp.float32)
+    sp = kops.support_projection(sv, enc, jnp.float32)
+    neg, idx_ref = jax.lax.top_k(-(q1h @ sp.T), 30)
+    dist, idx = kops.lut_shortlist(qv, sv, enc, 30)
+    np.testing.assert_array_equal(np.asarray(-neg), np.asarray(dist))
+    np.testing.assert_array_equal(np.asarray(idx_ref), np.asarray(idx))
+
+
+def test_shortlist_valid_mask_excludes_rows():
+    """Masked rows rank after every valid row (integer-exact penalty), and
+    masking is bit-identical across shortlist backends."""
+    cfg = SearchConfig("mtmc", cl=4, mode="avss", mcam=MCAMConfig(),
+                       use_kernel="ref")
+    sv = jax.random.randint(jax.random.PRNGKey(0), (40, 16), 0,
+                            cfg.enc.levels)
+    qv = jax.random.randint(jax.random.PRNGKey(1), (3, 16), 0, 4)
+    valid = (jnp.arange(40) % 3) != 0                      # 26 valid rows
+    res = {b: RetrievalEngine(cfg, backend=b).two_phase(qv, sv, k=20,
+                                                        valid=valid)
+           for b in ("ref", "mxu", "fused")}
+    for b in ("mxu", "fused"):
+        for key in ("votes", "dist", "indices"):
+            np.testing.assert_array_equal(
+                np.asarray(res["ref"][key]), np.asarray(res[b][key]),
+                err_msg=f"{b}/{key}")
+    # k=20 <= 26 valid rows: no masked row may appear at all
+    assert bool(jnp.all(valid[res["ref"]["indices"]]))
+
+
+# ---------------------------------------------------------------------------
+# (c) Two-phase recall@k == 1.0 vs full search on small clustered stores.
+# ---------------------------------------------------------------------------
+
+
+def _clustered_store(key, n_way=10, k_shot=4, n_query=2, dim=32):
+    kc, ks, kq = jax.random.split(jax.random.PRNGKey(key), 3)
+    centers = jax.random.normal(kc, (n_way, dim)) * 2.2
+    s_lab = jnp.repeat(jnp.arange(n_way), k_shot)
+    q_lab = jnp.repeat(jnp.arange(n_way), n_query)
+    s = centers[s_lab] + 0.9 * jax.random.normal(ks, (len(s_lab), dim))
+    q = centers[q_lab] + 0.9 * jax.random.normal(kq, (len(q_lab), dim))
+    lo, hi = float(s.min()), float(s.max())
+    to_int = lambda x, lv: jnp.clip(jnp.round(
+        (x - lo) / (hi - lo) * (lv - 1)), 0, lv - 1).astype(jnp.int32)
+    return to_int(q, 4), to_int(s, 25)  # mtmc cl=8 -> 25 levels
+
+
+@pytest.mark.parametrize("key", [0, 1, 2])
+def test_two_phase_recall_at_k_is_one(key):
+    cfg = SearchConfig("mtmc", cl=8, mode="avss", mcam=MCAMConfig(),
+                       use_kernel="ref")
+    qv, sv = _clustered_store(key)
+    eng = RetrievalEngine(cfg, backend="ref")
+    full = eng.full(qv, sv)
+    full_best = np.asarray(avss_lib.best_support(full))
+    tp = eng.two_phase(qv, sv, k=16)
+    idx = np.asarray(tp["indices"])
+    # recall@k: the full-search winner makes the shortlist for every query
+    in_shortlist = [full_best[b] in idx[b] for b in range(len(full_best))]
+    assert float(np.mean(in_shortlist)) == 1.0
+    # and the two-phase 1-NN decision matches the full search exactly
+    best = np.asarray(avss_lib.best_support(tp))
+    tp_best = idx[np.arange(len(best)), best]
+    recall = float((full_best == tp_best).mean())
+    assert recall == 1.0, recall
+
+
+# ---------------------------------------------------------------------------
+# (b) Sharded two-phase == single-device two-phase, bit for bit, on a forced
+# 8-device host mesh (subprocess: XLA_FLAGS must precede jax import).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sharded_two_phase_bit_identical():
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.avss import SearchConfig
+        from repro.core.mcam import MCAMConfig
+        from repro.engine import RetrievalEngine
+
+        cfg = SearchConfig("mtmc", cl=8, mode="avss", mcam=MCAMConfig(),
+                           use_kernel="ref")
+        N, B, d = 256, 6, 48
+        sv = jax.random.randint(jax.random.PRNGKey(0), (N, d), 0,
+                                cfg.enc.levels)
+        qv = jax.random.randint(jax.random.PRNGKey(1), (B, d), 0, 4)
+        eng = RetrievalEngine(cfg, backend="ref")
+        tp = eng.two_phase(qv, sv, k=48)
+        for shape, axes in [((8,), ("data",)),
+                            ((4, 2), ("data", "model"))]:
+            mesh = jax.make_mesh(shape, ("data", "model")[:len(shape)])
+            svs = jax.device_put(sv, NamedSharding(mesh, P(axes)))
+            with mesh:
+                sh = eng.sharded_two_phase(qv, svs, mesh, axes=axes, k=48)
+            for key in ("votes", "dist", "indices"):
+                np.testing.assert_array_equal(
+                    np.asarray(tp[key]), np.asarray(sh[key]),
+                    err_msg=f"{shape}/{key}")
+        # adversarial tie stress: every row duplicated once per shard, so
+        # every distance appears 8x and the (distance, global row) ordering
+        # is the ONLY thing keeping shards in agreement
+        sv2 = jnp.concatenate([sv[:32]] * 8, 0)
+        tp2 = eng.two_phase(qv, sv2, k=40)
+        mesh = jax.make_mesh((8,), ("data",))
+        svs2 = jax.device_put(sv2, NamedSharding(mesh, P("data")))
+        with mesh:
+            sh2 = eng.sharded_two_phase(qv, svs2, mesh, axes=("data",),
+                                        k=40)
+        for key in ("votes", "dist", "indices"):
+            np.testing.assert_array_equal(np.asarray(tp2[key]),
+                                          np.asarray(sh2[key]), err_msg=key)
+
+        # validity mask: parity must survive phase-1 masking too
+        valid = (jnp.arange(N) % 5) != 0
+        tpm = eng.two_phase(qv, sv, k=48, valid=valid)
+        shm = eng.sharded_two_phase(
+            qv, jax.device_put(sv, NamedSharding(mesh, P("data"))),
+            mesh, axes=("data",), k=48,
+            valid=jax.device_put(valid, NamedSharding(mesh, P("data"))))
+        for key in ("votes", "dist", "indices"):
+            np.testing.assert_array_equal(np.asarray(tpm[key]),
+                                          np.asarray(shm[key]),
+                                          err_msg=f"mask/{key}")
+
+        # memory-level: distributed exact search == local two-phase search
+        from repro.core import memory as mem
+        from repro.core.memory import MemoryConfig
+        mcfg = MemoryConfig(capacity=128, dim=24,
+                            search=SearchConfig("mtmc", cl=8, mode="avss",
+                                                use_kernel="ref"))
+        vecs = jax.random.normal(jax.random.PRNGKey(5), (96, 24))
+        labs = jnp.arange(96, dtype=jnp.int32) % 7
+        state = mem.init_memory(mcfg)
+        state = mem.calibrate(state, vecs, mcfg)
+        state = mem.write(state, vecs, labs, mcfg)
+        queries = vecs[:5] + 0.05 * jax.random.normal(
+            jax.random.PRNGKey(6), (5, 24))
+        local = mem.search(state, queries, mcfg, two_phase=True, k=16)
+        mesh = jax.make_mesh((8,), ("data",))
+        sstate = mem.shard_state(state, mesh, ("data",))
+        with mesh:
+            dist = mem.distributed_search(sstate, queries, mcfg, mesh,
+                                          axes=("data",), k=16)
+        for key in ("votes", "dist", "indices", "labels"):
+            np.testing.assert_array_equal(np.asarray(local[key]),
+                                          np.asarray(dist[key]), err_msg=key)
+        print("SHARDED-BIT-IDENTICAL")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARDED-BIT-IDENTICAL" in proc.stdout

@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import hat
 from repro.core.avss import SearchConfig
@@ -47,6 +48,7 @@ def test_asymmetric_quant_levels():
     assert len(np.unique(np.asarray(qs))) > 4  # finer support grid
 
 
+@pytest.mark.slow
 def test_simulate_mcam_gradients_nonzero():
     hcfg = HATConfig(search=SearchConfig(encoding="mtmc", cl=4, mode="avss"))
     B, N, dim, nway = 4, 10, 12, 5
@@ -64,6 +66,7 @@ def test_simulate_mcam_gradients_nonzero():
     assert float(jnp.linalg.norm(gs)) > 0
 
 
+@pytest.mark.slow
 def test_hat_training_improves_episode_accuracy():
     """Meta-training a linear controller THROUGH the noisy MCAM simulator
     improves held-out episode accuracy (HAT learns hardware-robust

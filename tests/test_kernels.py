@@ -26,6 +26,7 @@ def _layouts(mode, enc, d, N, B, seed=0):
 @pytest.mark.parametrize("encoding,cl", [("mtmc", 4), ("mtmc", 9),
                                          ("b4e", 2), ("sre", 3)])
 @pytest.mark.parametrize("d", [10, 48])
+@pytest.mark.slow
 def test_search_kernel_matches_ref(mode, encoding, cl, d):
     cfg = SearchConfig(encoding=encoding, cl=cl, mode=mode,
                        mcam=MCAMConfig(sigma_device=0.1, sigma_read=0.05))
@@ -50,6 +51,7 @@ def test_search_kernel_matches_ref(mode, encoding, cl, d):
 
 
 @pytest.mark.parametrize("tile_b,tile_n", [(2, 16), (8, 64)])
+@pytest.mark.slow
 def test_kernel_tiling_invariance(tile_b, tile_n):
     """Different VMEM tilings must produce bit-identical results."""
     cfg = SearchConfig(encoding="mtmc", cl=6, mode="avss")
@@ -93,6 +95,7 @@ def test_mxu_lut_dist_exact(cl, d):
     np.testing.assert_array_equal(np.asarray(di), expect)
 
 
+@pytest.mark.slow
 def test_two_phase_matches_full_search():
     cfg = SearchConfig(encoding="mtmc", cl=8, mode="avss", use_kernel="ref")
     enc = cfg.enc
@@ -106,6 +109,7 @@ def test_two_phase_matches_full_search():
                                rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_two_phase_winner_agreement():
     """Shortlist recall: on UNSTRUCTURED random vectors (worst case: many
     near-ties) k=64/200 already recovers the exact noisy-vote winner; the

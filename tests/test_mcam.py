@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import mcam
 from repro.core.mcam import MCAMConfig
@@ -65,6 +66,7 @@ def test_hash_noise_deterministic_and_distributed():
     assert abs(arr.mean()) < 0.05 and abs(arr.std() - 1.0) < 0.05
 
 
+@pytest.mark.slow
 def test_device_noise_perturbs_current():
     cfg = MCAMConfig(sigma_device=0.2, sigma_read=0.05)
     cells = jnp.ones((4, 24))

@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import memory as mem
 from repro.core.avss import SearchConfig
@@ -28,6 +29,7 @@ def _toy_memory(n_classes=6, per_class=8, dim=24, key=0):
     return cfg, state, centers
 
 
+@pytest.mark.slow
 def test_write_and_1nn_predict():
     cfg, state, centers = _toy_memory()
     queries = centers + 0.1 * jax.random.normal(jax.random.PRNGKey(9),
@@ -37,6 +39,7 @@ def test_write_and_1nn_predict():
     np.testing.assert_array_equal(np.asarray(pred), np.arange(6))
 
 
+@pytest.mark.slow
 def test_two_phase_predict_matches():
     cfg, state, centers = _toy_memory()
     queries = centers + 0.1 * jax.random.normal(jax.random.PRNGKey(9),
@@ -46,6 +49,7 @@ def test_two_phase_predict_matches():
     np.testing.assert_array_equal(np.asarray(pred), np.arange(6))
 
 
+@pytest.mark.slow
 def test_unwritten_slots_masked():
     cfg, state, _ = _toy_memory(per_class=2)  # 12 of 128 slots used
     q = jax.random.normal(jax.random.PRNGKey(3), (4, cfg.dim))
@@ -68,6 +72,7 @@ def test_ring_buffer_overwrite():
     assert (labels[:8] == 1).all() and (labels[8:] == 0).all()
 
 
+@pytest.mark.slow
 def test_distributed_search_matches_local():
     cfg, state, centers = _toy_memory(dim=24)
     mesh = jax.make_mesh((1, 1), ("data", "model"))

@@ -29,6 +29,7 @@ def _batch(cfg, B, S, key):
     return b
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_smoke_forward(arch):
     cfg = load_config(arch, smoke=True)
@@ -40,6 +41,13 @@ def test_smoke_forward(arch):
     assert np.isfinite(np.asarray(logits, np.float32)).all()
 
 
+def test_smoke_forward_canary():
+    """Fast-tier canary: one reduced arch forward on every push; the full
+    arch x {forward, train, decode} matrix is @slow (weekly/full tier)."""
+    test_smoke_forward("starcoder2-3b")
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_smoke_train_step(arch):
     cfg = load_config(arch, smoke=True)
@@ -63,6 +71,7 @@ def test_smoke_train_step(arch):
     assert d > 0.0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["llama3-405b", "deepseek-v3-671b",
                                   "xlstm-350m", "hymba-1.5b"])
 def test_smoke_decode_step(arch):
@@ -102,6 +111,7 @@ def test_full_configs_match_assignment():
     assert load_config("hymba-1.5b").ssm.d_state == 16
 
 
+@pytest.mark.slow
 def test_param_counts_in_range():
     """Sanity: total parameter counts are near the advertised sizes."""
     import numpy as np

@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import load_config
 from repro.models import moe as moe_lib
@@ -17,6 +18,7 @@ def _cfg(cf=8.0):
         cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=cf))
 
 
+@pytest.mark.slow
 def test_moe_forward_shapes_and_aux():
     cfg = _cfg()
     p = moe_lib.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
@@ -28,6 +30,7 @@ def test_moe_forward_shapes_and_aux():
     assert float(aux["z_loss"]) >= 0
 
 
+@pytest.mark.slow
 def test_moe_high_capacity_processes_all_tokens():
     """With ample capacity, output == exact dense top-k mixture."""
     cfg = _cfg(cf=64.0)
@@ -55,6 +58,7 @@ def test_moe_high_capacity_processes_all_tokens():
     np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4)
 
 
+@pytest.mark.slow
 def test_moe_capacity_drops_tokens():
     """Tiny capacity must change the output (tokens dropped)."""
     y_hi, _ = _run_cf(8.0)
@@ -70,6 +74,7 @@ def _run_cf(cf):
     return np.asarray(y), aux
 
 
+@pytest.mark.slow
 def test_moe_group_invariance():
     """Same tokens, different group counts => same output when capacity
     scales with group size (no drops)."""
@@ -86,6 +91,7 @@ def test_moe_group_invariance():
     np.testing.assert_allclose(outs[0], outs[2], atol=1e-4)
 
 
+@pytest.mark.slow
 def test_balanced_router_low_aux():
     """Uniform routing => load_balance ~ 1 (its minimum)."""
     cfg = _cfg()

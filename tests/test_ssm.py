@@ -17,6 +17,7 @@ def _cfg():
 
 
 @pytest.mark.parametrize("chunk", [1, 4, 16])
+@pytest.mark.slow
 def test_mlstm_chunkwise_equals_step(chunk):
     cfg = _cfg()
     key = jax.random.PRNGKey(0)
@@ -37,6 +38,7 @@ def test_mlstm_chunkwise_equals_step(chunk):
                                    atol=2e-5)
 
 
+@pytest.mark.slow
 def test_mlstm_state_carry_across_calls():
     """Two halves with carried state == one full pass."""
     cfg = _cfg()
@@ -49,6 +51,7 @@ def test_mlstm_state_carry_across_calls():
                                np.asarray(y_full), atol=2e-5)
 
 
+@pytest.mark.slow
 def test_slstm_step_equals_seq():
     cfg = _cfg()
     p = S.slstm_init(jax.random.PRNGKey(0), cfg, jnp.float32)
@@ -64,6 +67,7 @@ def test_slstm_step_equals_seq():
                                np.asarray(y_seq), atol=1e-5)
 
 
+@pytest.mark.slow
 def test_mamba_step_equals_seq():
     cfg = dataclasses.replace(load_config("hymba-1.5b", smoke=True),
                               dtype="float32", param_dtype="float32")

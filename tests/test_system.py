@@ -15,6 +15,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import avss as avss_lib
 from repro.core import costmodel
@@ -71,6 +72,7 @@ def _mean_acc(cfg, n=3, **kw):
     return np.mean([_episode_accuracy(cfg, key=k, **kw) for k in range(n)])
 
 
+@pytest.mark.slow
 def test_mtmc_beats_b4e_under_noise():
     """Fig. 9: at matched quantization levels, MTMC's bottleneck immunity
     beats bit-sliced B4E on the noisy MCAM."""
@@ -82,6 +84,7 @@ def test_mtmc_beats_b4e_under_noise():
     assert acc_mtmc >= acc_b4e, (acc_mtmc, acc_b4e)
 
 
+@pytest.mark.slow
 def test_avss_close_to_svss():
     """Sec. 4.3: AVSS trades <~ a few points of accuracy for 32x speed."""
     mcam = MCAMConfig(sigma_device=0.1, sigma_read=0.04)
@@ -93,29 +96,27 @@ def test_avss_close_to_svss():
     assert acc_avss > 0.5
 
 
-def test_full_mann_pipeline_with_controller():
+@pytest.mark.slow
+def test_full_mann_pipeline_with_controller(fsl_episode, conv4_embeddings):
     """Conv4 controller (untrained) + memory + AVSS beats chance by a wide
-    margin on the procedural Omniglot-like episodes."""
+    margin on the procedural Omniglot-like episodes.
+
+    (Historical note: this asserted > 0.4 and failed at 0.35 in the seed --
+    the root cause was memory.calibrate quantizing post-ReLU embeddings over
+    an un-clamped mu +/- 2.5 sigma range, wasting half of the 4-level query
+    range on the empty negative half. Fixed in calibrate; accuracy 0.65.)"""
     from repro.core import memory as mem
     from repro.core.memory import MemoryConfig
-    from repro.data.fsl import EpisodeSampler, OmniglotLike
-    from repro.models.controller import apply_conv4, init_conv4
 
-    ds = OmniglotLike(n_classes=20, image_size=20, seed=0)
-    samp = EpisodeSampler(ds, np.arange(20), n_way=5, k_shot=5, n_query=4,
-                          seed=0)
-    ep = samp.episode(0)
-    params = init_conv4(jax.random.PRNGKey(0), in_ch=1, width=32,
-                        embed_dim=24)
-    s_emb = apply_conv4(params, jnp.asarray(ep.support_images))
-    q_emb = apply_conv4(params, jnp.asarray(ep.query_images))
+    _, s_emb, q_emb = conv4_embeddings
     cfg = MemoryConfig(capacity=64, dim=24,
                        search=SearchConfig("mtmc", cl=8, mode="avss",
                                            use_kernel="ref"))
     state = mem.init_memory(cfg)
     state = mem.calibrate(state, s_emb, cfg)
-    state = mem.write(state, s_emb, jnp.asarray(ep.support_labels), cfg)
+    state = mem.write(state, s_emb, jnp.asarray(fsl_episode.support_labels),
+                      cfg)
     res = mem.search(state, q_emb, cfg)
     pred = mem.predict(res)
-    acc = float((pred == jnp.asarray(ep.query_labels)).mean())
+    acc = float((pred == jnp.asarray(fsl_episode.query_labels)).mean())
     assert acc > 0.4, acc  # chance = 0.2
