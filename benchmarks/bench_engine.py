@@ -22,7 +22,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from benchmarks.common import time_us
 from repro.core.avss import SearchConfig
 from repro.core.mcam import MCAMConfig
-from repro.engine import RetrievalEngine
+from repro.engine import (MemoryStore, RetrievalEngine, SearchRequest)
 
 N, B, D, K = 2048, 16, 48, 64
 
@@ -56,6 +56,22 @@ def run():
         np.testing.assert_array_equal(np.asarray(votes_tp["ref"]),
                                       np.asarray(votes_tp[backend]))
 
+    # unified API: engine.search over a programmed MemoryStore (write-time
+    # proj + s_grid layouts -- the serving path). Must be bit-identical to
+    # the raw two-phase call AND at least as fast per query (no per-call
+    # re-layout of the store).
+    labels = jnp.arange(N, dtype=jnp.int32) % 128
+    store = MemoryStore.from_quantized(sv, labels, cfg)
+    req = SearchRequest(mode="two_phase", k=K)
+    for backend in ("ref", "mxu", "fused"):
+        eng = RetrievalEngine(cfg, backend=backend)
+        f_st = jax.jit(lambda st, q, e=eng: e.search(st, q, req).votes)
+        us_st, votes_st = time_us(f_st, store, qv, iters=3)
+        rows.append((f"engine/search_store_k{K}_{backend}", us_st,
+                     qps(us_st) + f";speedup_vs_full={us_full / us_st:.1f}x"))
+        np.testing.assert_array_equal(np.asarray(votes_tp["ref"]),
+                                      np.asarray(votes_st))
+
     # sharded two-phase over every local device (1 on a plain CPU run;
     # launch with XLA_FLAGS=--xla_force_host_platform_device_count=8 to see
     # the multi-shard shape)
@@ -71,6 +87,17 @@ def run():
                  qps(us_sh) + f";shards={n_dev}"))
     np.testing.assert_array_equal(np.asarray(votes_tp["ref"]),
                                   np.asarray(votes_sh))
+
+    # shard-aware store: the same search request against store.shard(...)
+    # dispatches to the sharded path (labels folded into the merge)
+    sstore = store.shard(mesh, ("data",))
+    with mesh:
+        f_ss = jax.jit(lambda st, q: eng.search(st, q, req).votes)
+        us_ss, votes_ss = time_us(f_ss, sstore, qv, iters=3)
+    rows.append((f"engine/search_sharded_k{K}_dev{n_dev}", us_ss,
+                 qps(us_ss) + f";shards={n_dev}"))
+    np.testing.assert_array_equal(np.asarray(votes_tp["ref"]),
+                                  np.asarray(votes_ss))
 
     # two-phase recall@k of the 1-NN decision vs the full search
     from repro.core import avss as avss_lib

@@ -9,7 +9,11 @@ Suites:
   table2   SVSS vs AVSS accuracy + throughput (bench_avss)
   fig9     energy-accuracy Pareto fronts (bench_pareto)
   kernel   Pallas kernels + two-phase recall (bench_kernels)
-  engine   retrieval engine: full vs two-phase vs sharded (bench_engine)
+  engine   retrieval engine: full vs two-phase vs sharded vs store-based
+           unified search (bench_engine)
+  engine_sharded  multi-device sharded scaling on a forced 8-device host
+           mesh (subprocess, like tests/test_distributed.py); writes
+           results/bench_engine_sharded.json (CI artifact)
   roofline dry-run derived roofline terms (benchmarks.roofline; needs the
            dryrun sweep artifacts under results/dryrun)
 """
@@ -26,6 +30,7 @@ SUITES = {
     "fig9": "benchmarks.bench_pareto",
     "kernel": "benchmarks.bench_kernels",
     "engine": "benchmarks.bench_engine",
+    "engine_sharded": "benchmarks.bench_engine_sharded",
     "roofline": "benchmarks.roofline",
 }
 

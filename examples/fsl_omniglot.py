@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.omniglot_conv4 import get_config, get_smoke_config
-from repro.core import avss as avss_lib, hat
+from repro.core import hat
 from repro.core.avss import SearchConfig
 from repro.core.hat import HATConfig, meta_loss, pretrain_loss
 from repro.core.mcam import MCAMConfig
@@ -38,13 +38,16 @@ def embed_apply(params, images):
 
 def evaluate(params, sampler, search_cfg, episodes=6, backend="auto",
              two_phase=False, k=64):
-    """Episode accuracy through the unified retrieval engine.
+    """Episode accuracy through the unified retrieval API: each episode's
+    quantized supports are programmed into a MemoryStore (write-time MCAM
+    layouts) and searched via engine.search with one typed request.
 
     two_phase=True evaluates the production serving path (MXU shortlist +
     exact noisy rescore) instead of the full search -- accuracies match
     whenever the 1-NN makes the shortlist (recall@k, see bench_engine)."""
-    from repro.engine import RetrievalEngine
+    from repro.engine import MemoryStore, RetrievalEngine, SearchRequest
     engine = RetrievalEngine(search_cfg, backend=backend)
+    request = SearchRequest(mode="two_phase" if two_phase else "full", k=k)
     accs = []
     for e in range(episodes):
         ep = sampler.episode(1000 + e)
@@ -57,14 +60,8 @@ def evaluate(params, sampler, search_cfg, episodes=6, backend="auto",
             qv, _, _ = fake_quant(q_emb, QuantSpec(search_cfg.enc.levels), rng)
         qv, sv = qv.astype(jnp.int32), sv.astype(jnp.int32)
         s_lab = jnp.asarray(ep.support_labels)
-        if two_phase:
-            res = engine.two_phase(qv, sv, k=k)
-            best = avss_lib.best_support(res)
-            nn = jnp.take_along_axis(res["indices"], best[:, None], 1)[:, 0]
-            pred = s_lab[nn]
-        else:
-            res = engine.full(qv, sv)
-            pred = avss_lib.predict_1nn(res, s_lab)
+        store = MemoryStore.from_quantized(sv, s_lab, search_cfg)
+        pred = engine.search(store, qv, request).predict()
         accs.append(float((pred == jnp.asarray(ep.query_labels)).mean()))
     return float(np.mean(accs)), float(np.std(accs))
 

@@ -12,9 +12,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import costmodel, memory as mem
+from repro.core import costmodel
 from repro.core.avss import SearchConfig, search_iterations
 from repro.core.memory import MemoryConfig
+from repro.engine import MemoryStore, RetrievalEngine, SearchRequest
 
 
 def main():
@@ -30,19 +31,19 @@ def main():
 
     cfg = MemoryConfig(capacity=512, dim=dim,
                        search=SearchConfig("mtmc", cl=cl, mode="avss"))
-    state = mem.init_memory(cfg)
-    state = mem.calibrate(state, support, cfg)
-    state = mem.write(state, support, s_lab, cfg)
+    # program once: quantized values, MTMC LUT projection AND string-grid
+    # layout are all materialised at write time (real MCAM programming)
+    store = MemoryStore.create(cfg).calibrate(support).write(support, s_lab)
+    engine = RetrievalEngine(cfg.search)
 
-    res = mem.search(state, queries, cfg)
-    pred = mem.predict(res)
-    acc = float((pred == jnp.arange(n_way)).mean())
+    res = engine.search(store, queries, SearchRequest(mode="full"))
+    acc = float((res.predict() == jnp.arange(n_way)).mean())
     print(f"[full search]      accuracy {acc:.2%} "
           f"({n_way}-way {k_shot}-shot, MTMC CL={cl}, noisy MCAM)")
 
-    res2 = mem.search(state, queries, cfg, two_phase=True, k=32)
-    pred2 = mem.predict(res2)
-    acc2 = float((pred2 == jnp.arange(n_way)).mean())
+    res2 = engine.search(store, queries, SearchRequest(mode="two_phase",
+                                                       k=32))
+    acc2 = float((res2.predict() == jnp.arange(n_way)).mean())
     print(f"[two-phase search] accuracy {acc2:.2%} "
           f"(MXU LUT shortlist k=32 + exact rescore)")
 

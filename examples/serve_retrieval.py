@@ -15,9 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import load_config
-from repro.core import memory as mem
 from repro.core.avss import SearchConfig
 from repro.core.memory import MemoryConfig
+from repro.engine import MemoryStore
 from repro.launch import steps as steps_lib
 from repro.models import transformer as tfm
 from repro.models.sharding import Rules
@@ -40,15 +40,16 @@ def main():
     max_seq = P + args.steps
 
     # --- the MCAM memory: token-labelled embedding store (kNN-LM head) ---
+    # programmed ONCE at write time (quantized values + LUT projection +
+    # string-grid layout); the decode loop jits against the constants
     mem_cfg = MemoryConfig(
         capacity=1024, dim=min(48, cfg.d_model),
         search=SearchConfig("mtmc", cl=8, mode="avss", use_kernel="ref"))
-    mstate = mem.init_memory(mem_cfg)
     demo_vecs = jax.random.normal(jax.random.PRNGKey(7), (256, mem_cfg.dim))
     demo_tok = jax.random.randint(jax.random.PRNGKey(8), (256,), 0,
                                   cfg.vocab_size)
-    mstate = mem.calibrate(mstate, demo_vecs, mem_cfg)
-    mstate = mem.write(mstate, demo_vecs, demo_tok, mem_cfg)
+    mstate = (MemoryStore.create(mem_cfg).calibrate(demo_vecs)
+              .write(demo_vecs, demo_tok))
 
     serve_step = steps_lib.make_serve_step_with_mcam(cfg, rules, mem_cfg,
                                                      lam=args.lam)

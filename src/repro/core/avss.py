@@ -92,11 +92,17 @@ def layout_support(values: jax.Array, enc: Encoding,
 
     Padding dimensions store code 0 and are always searched with query word 0,
     contributing zero mismatch (and rho**0 resistance, as real pass cells do).
+
+    This is WRITE-TIME work: MemoryStore.write materialises the grid once at
+    programming time, and serving jits against the stored constant. The
+    named_scope tags any traced call in compiled HLO so tests can assert the
+    serve decode step does NOT re-lay out the store per step.
     """
-    codes = enc.encode(values)                       # (N, d, L)
-    codes = jnp.moveaxis(codes, -1, -2)              # (N, L, d)
-    codes = _segment_dims(codes, string_len)         # (N, L, seg, sl)
-    return jnp.moveaxis(codes, -3, -2)               # (N, seg, L, sl)
+    with jax.named_scope("layout_support"):
+        codes = enc.encode(values)                   # (N, d, L)
+        codes = jnp.moveaxis(codes, -1, -2)          # (N, L, d)
+        codes = _segment_dims(codes, string_len)     # (N, L, seg, sl)
+        return jnp.moveaxis(codes, -3, -2)           # (N, seg, L, sl)
 
 
 def layout_query(values: jax.Array, enc: Encoding, mode: Mode,
@@ -146,6 +152,7 @@ def search_quantized(q_values: jax.Array, s_values: jax.Array,
     """
     # Dispatch lives in the engine layer (repro/engine); this wrapper keeps
     # the historical API for callers that think in terms of raw searches.
+    # (The store-centric path is RetrievalEngine.search(MemoryStore...).)
     from repro.engine import RetrievalEngine
     return RetrievalEngine(cfg).full(q_values, s_values)
 

@@ -1,26 +1,32 @@
-"""MANN external memory backed by the simulated MCAM (sharded, first-class).
+"""Legacy MANN external-memory API: thin deprecation shims over MemoryStore.
 
-This is the module any backbone in the framework attaches to for many-class
-few-shot heads / kNN memories: `write` stores controller embeddings (quantized
-+ MTMC-projected at write time, as real MCAM programming would), `search` runs
-AVSS and returns vote scores, and `distributed_search` shards the store across
-an arbitrary mesh axis set with a local-top-k -> all-gather -> global-top-k
-reduction (the block-parallel search a multi-chip MCAM deployment performs).
+The store itself moved to `repro.engine.store.MemoryStore` (an immutable
+registered pytree whose `write` materialises the quantized values, the MTMC
+LUT projection AND the string-grid layout at write time), and every search
+goes through the unified `RetrievalEngine.search(store, queries,
+SearchRequest) -> SearchResult` entry point. This module keeps the
+pre-redesign dict-state functions working, bit-identically, for old callers:
+
+  init_memory/calibrate/write   ->  MemoryStore.create/.calibrate/.write
+  search                        ->  engine.search(store, q, mode=full|two_phase)
+  distributed_search            ->  engine.search(store.shard(mesh, axes), q)
+  shard_state                   ->  MemoryStore.shard
+
+`search` and `distributed_search` emit a DeprecationWarning (once per
+process per function); results remain bit-identical to the new API
+(tests/test_deprecations.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.core import avss as avss_lib
 from repro.core.avss import SearchConfig
-from repro.core.quantization import QuantSpec, fake_quant
-from repro.kernels import ops as kernel_ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,91 +37,70 @@ class MemoryConfig:
     clip_std: float = 2.5
 
 
+_WARNED: set = set()
+
+
+def _warn_once(name: str, replacement: str) -> None:
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"repro.core.memory.{name} is deprecated; use {replacement}",
+        DeprecationWarning, stacklevel=3)
+
+
+def _store(state: dict, cfg: MemoryConfig):
+    from repro.engine.store import MemoryStore
+    return MemoryStore.from_state(state, cfg)
+
+
 def init_memory(cfg: MemoryConfig) -> dict:
-    enc = cfg.search.enc
-    return {
-        "values": jnp.zeros((cfg.capacity, cfg.dim), jnp.int32),
-        "proj": jnp.zeros((cfg.capacity, 4 * cfg.dim), jnp.bfloat16),
-        "labels": jnp.full((cfg.capacity,), -1, jnp.int32),
-        "size": jnp.zeros((), jnp.int32),
-        "lo": jnp.zeros((), jnp.float32),
-        "hi": jnp.ones((), jnp.float32),
-    }
+    """Legacy dict view of an empty MemoryStore (now also carries the
+    write-time `s_grid` layout alongside `proj`)."""
+    from repro.engine.store import MemoryStore
+    return MemoryStore.create(cfg).to_state()
 
 
 def calibrate(state: dict, vectors: jax.Array, cfg: MemoryConfig) -> dict:
-    """Set the quantization range from a sample of embeddings (std clipping,
-    paper Sec. 3.3). Must run before the first write.
-
-    The std range is clamped to the observed data extent, matching
-    quantization.clip_range: one-sided distributions (post-ReLU controller
-    embeddings) would otherwise spend half of the query's 4 levels on an
-    empty half-range."""
-    mu, sd = vectors.mean(), vectors.std() + 1e-8
-    lo = jnp.maximum(mu - cfg.clip_std * sd, vectors.min())
-    hi = jnp.minimum(mu + cfg.clip_std * sd, vectors.max() + 1e-8)
-    return {**state, "lo": lo, "hi": hi}
-
-
-def _quantize(x, levels, lo, hi):
-    scale = (levels - 1) / (hi - lo)
-    q = jnp.round((jnp.clip(x, lo, hi) - lo) * scale)
-    return jnp.clip(q, 0, levels - 1).astype(jnp.int32)
+    """Set the quantization range from a sample of embeddings (std clipping
+    clamped to the data extent, paper Sec. 3.3). Must run before the first
+    write."""
+    return _store(state, cfg).calibrate(vectors).to_state()
 
 
 def write(state: dict, vectors: jax.Array, labels: jax.Array,
           cfg: MemoryConfig) -> dict:
     """Program a batch of support embeddings into the store (ring buffer)."""
-    enc = cfg.search.enc
-    v = _quantize(vectors, enc.levels, state["lo"], state["hi"])
-    proj = kernel_ops.support_projection(v, enc)
-    n = vectors.shape[0]
-    start = state["size"] % cfg.capacity
-    idx = (start + jnp.arange(n)) % cfg.capacity
-    return {
-        **state,
-        "values": state["values"].at[idx].set(v),
-        "proj": state["proj"].at[idx].set(proj),
-        "labels": state["labels"].at[idx].set(labels.astype(jnp.int32)),
-        "size": state["size"] + n,
-    }
+    return _store(state, cfg).write(vectors, labels).to_state()
 
 
 def quantize_queries(state: dict, queries: jax.Array) -> jax.Array:
+    from repro.engine.store import _quantize
     return _quantize(queries, 4, state["lo"], state["hi"])
 
 
 def search(state: dict, queries: jax.Array, cfg: MemoryConfig,
            two_phase: bool = False, k: int = 64,
            engine: "RetrievalEngine | None" = None) -> dict:
-    """AVSS over the whole store. queries: (B, dim) float embeddings.
+    """DEPRECATED: AVSS over the whole store; use RetrievalEngine.search.
 
-    Pass `engine` to reuse a configured RetrievalEngine (backend choice);
-    by default one is built from cfg.search.
+    Bit-identical to engine.search(MemoryStore.from_state(state, cfg),
+    queries, SearchRequest(mode='two_phase' if two_phase else 'full', k)).
     """
-    from repro.engine import RetrievalEngine
+    _warn_once("search", "RetrievalEngine.search(store, queries, "
+                         "SearchRequest(...))")
+    from repro.engine import RetrievalEngine, SearchRequest
     eng = engine or RetrievalEngine(cfg.search)
-    q = quantize_queries(state, queries)
-    if two_phase:
-        # mask unwritten slots out of the phase-1 shortlist; same expression
-        # as distributed_search so the two paths stay bit-identical
-        res = eng.two_phase(q, state["values"], k=k,
-                            valid=state["labels"] >= 0)
-        valid = res["indices"] < state["size"]
-        votes = jnp.where(valid, res["votes"], -jnp.inf)
-        labels = jnp.where(valid, state["labels"][res["indices"]], -1)
-        return {**res, "votes": votes, "labels": labels}
-    res = eng.full(q, state["values"])
-    slot = jnp.arange(cfg.capacity)
-    votes = jnp.where(slot[None, :] < state["size"], res["votes"], -jnp.inf)
-    return {**res, "votes": votes,
-            "labels": jnp.broadcast_to(state["labels"], votes.shape)}
+    req = SearchRequest(mode="two_phase" if two_phase else "full", k=k)
+    return eng.search(_store(state, cfg), queries, req).asdict()
 
 
-def predict(result: dict) -> jax.Array:
-    """1-NN label prediction from a (two-phase, full, or distributed) search
-    result: max votes, vote ties broken exactly by the ideal digital
-    distance (avss.best_support); masked slots carry -inf votes and lose."""
+def predict(result) -> jax.Array:
+    """1-NN label prediction from a search result (SearchResult or legacy
+    dict): max votes, vote ties broken exactly by the ideal digital
+    distance; masked slots carry -inf votes and lose."""
+    if hasattr(result, "predict"):
+        return result.predict()
     best = avss_lib.best_support(result)
     return jnp.take_along_axis(result["labels"], best[:, None], 1)[:, 0]
 
@@ -125,48 +110,47 @@ def predict(result: dict) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def shard_state(state: dict, mesh, axes) -> dict:
-    """NamedSharding the store row-wise over `axes` (e.g. ('data','model'))."""
-    row = jax.sharding.NamedSharding(mesh, P(axes))
-    rep = jax.sharding.NamedSharding(mesh, P())
-    put = lambda x, s: jax.device_put(x, s)
-    return {
-        "values": put(state["values"], row),
-        "proj": put(state["proj"], row),
-        "labels": put(state["labels"], row),
-        "size": put(state["size"], rep),
-        "lo": put(state["lo"], rep),
-        "hi": put(state["hi"], rep),
-    }
+def shard_state(state: dict, mesh, axes,
+                cfg: MemoryConfig | None = None) -> dict:
+    """Legacy dict view of MemoryStore.shard: row-shard the store over
+    `axes`. Pass `cfg` for ragged (non-divisible) splits -- the pad rows'
+    write-time layouts depend on the encoding, so a default config would
+    pad with the wrong grid shape; divisible splits never pad and the
+    historical 3-arg signature keeps working."""
+    import numpy as np
+    n, d = state["values"].shape
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    if cfg is None:
+        if n % n_shards:
+            raise ValueError(
+                f"shard_state: {n} rows do not divide over {n_shards} "
+                f"shards; ragged splits pad with encoding-dependent rows, "
+                f"so pass cfg= (or use MemoryStore.shard directly)")
+        cfg = MemoryConfig(capacity=n, dim=d)
+    return _store(state, cfg).shard(mesh, axes).to_state()
 
 
 def distributed_search(state: dict, queries: jax.Array, cfg: MemoryConfig,
                        mesh, axes=("data", "model"), k: int = 16,
                        exact: bool = True) -> dict:
-    """Block-parallel AVSS over the row-sharded store.
+    """DEPRECATED: block-parallel AVSS over the row-sharded store; use
+    RetrievalEngine.search on a MemoryStore.shard(mesh, axes) store.
 
-    exact=True (default, paper-faithful): each shard shortlists its rows on
-    the MXU, runs the exact noisy vote rescore on its local candidates
-    (global indices feed the noise counters), and the candidate sets are
-    all-gathered and merged -- votes bit-identical to the single-device
-    `search(..., two_phase=True)` for every shortlisted support.
-
-    exact=False: ideal-digital-distance only (votes = -dist), the cheapest
-    serving path. Either way, collective volume is O(B * k * shards),
-    independent of capacity.
+    exact=True (default, paper-faithful): per-shard MXU shortlist + exact
+    noisy rescore with GLOBAL indices feeding the noise counters; candidate
+    labels come from per-shard lookups folded into the all-gather -- votes
+    bit-identical to the single-device two-phase search.
+    exact=False: ideal-digital-distance only, the cheapest serving path.
+    Either way, collective volume is O(B * k * shards), independent of
+    capacity.
     """
-    from repro.engine import sharded as sharded_lib
-    q = quantize_queries(state, queries)
-    if exact:
-        # mask unwritten slots out of the phase-1 shortlist (labels, like
-        # values, are row-sharded; < 0 marks an unwritten slot)
-        res = sharded_lib.sharded_two_phase_search(
-            q, state["values"], cfg.search, mesh, axes=axes, k=k,
-            valid=state["labels"] >= 0)
-        valid = res["indices"] < state["size"]
-        votes = jnp.where(valid, res["votes"], -jnp.inf)
-        labels = jnp.where(valid, state["labels"][res["indices"]], -1)
-        return {**res, "votes": votes, "labels": labels}
-    qrows = kernel_ops.query_onehot(q, jnp.float32)        # (B, 4d) replicated
-    return sharded_lib.sharded_ideal_search(
-        qrows, state["proj"], state["labels"], mesh, axes=axes, k=k)
+    _warn_once("distributed_search",
+               "RetrievalEngine.search(store.shard(mesh, axes), queries, "
+               "SearchRequest(...))")
+    from repro.engine import RetrievalEngine, SearchRequest
+    # shard() is free on a state that shard_state already placed: padding
+    # short-circuits at 0 rows and device_put returns the same buffers
+    # when the sharding is unchanged
+    store = _store(state, cfg).shard(mesh, tuple(axes))
+    req = SearchRequest(mode="two_phase" if exact else "ideal", k=k)
+    return RetrievalEngine(cfg.search).search(store, queries, req).asdict()

@@ -1,26 +1,38 @@
 """Unified retrieval engine: one API over the ref / Pallas / MXU-LUT backends.
 
-`RetrievalEngine` is the single dispatch point for every search path in the
-framework (the `use_kernel` branching formerly inlined in `core/avss.py`,
-`core/memory.py` and `kernels/ops.py`):
+The serving contract (PR 2) is store-centric:
 
-  full                exact noisy MCAM search over the whole store
-  two_phase           MXU shortlist by ideal digital distance + exact noisy
-                      rescore of the top-k candidates
-  sharded_two_phase   the same two-phase pipeline with the store row-sharded
-                      over mesh axes -- votes bit-identical to the
-                      single-device two_phase for every shortlisted support
+  MemoryStore          the programmed MCAM memory as an immutable registered
+                       pytree -- quantized values, labels, quant range, ring
+                       state, plus the WRITE-TIME `proj` (LUT projection) and
+                       `s_grid` (string-grid) layouts, and its own sharding
+                       (`shard(mesh, axes)` row-shards, padding ragged splits
+                       with label -1 rows).
+  SearchRequest        what to search: mode ('full' | 'two_phase' | 'ideal'),
+                       k, backend override, shard-axes override.
+  SearchResult         votes / dist / indices / labels / iterations -- one
+                       typed result for every mode, backend and sharding.
+  RetrievalEngine      `search(store, queries, request) -> SearchResult`, the
+                       single dispatch point. The raw-array methods (`full`,
+                       `two_phase`, `sharded_two_phase`) remain underneath
+                       for callers without a store; all paths are
+                       bit-identical (tests/test_engine.py).
 """
 
+from repro.engine.api import SearchRequest, SearchResult
 from repro.engine.backends import (BACKENDS, kernels_available,
                                    resolve_backend)
 from repro.engine.engine import RetrievalEngine
 from repro.engine.sharded import (sharded_ideal_search,
                                   sharded_two_phase_search)
+from repro.engine.store import MemoryStore
 
 __all__ = [
     "BACKENDS",
+    "MemoryStore",
     "RetrievalEngine",
+    "SearchRequest",
+    "SearchResult",
     "kernels_available",
     "resolve_backend",
     "sharded_ideal_search",

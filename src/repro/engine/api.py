@@ -1,0 +1,101 @@
+"""The typed request/result contract of the unified retrieval API.
+
+Every search in the framework goes through one entry point,
+
+    RetrievalEngine.search(store, queries, SearchRequest) -> SearchResult
+
+replacing the five overlapping ad-hoc paths of the pre-redesign API
+(`engine.full` / `engine.two_phase` / `engine.sharded_two_phase`,
+`memory.search` / `memory.distributed_search`) and their untyped result
+dicts. The request names WHAT to search (mode, k, backend, shard axes);
+the store (repro/engine/store.py) carries the programmed memory and its
+sharding; the result is a registered pytree safe to return from jit.
+
+Old -> new mapping (the old entry points remain as thin shims):
+
+  engine.full(q, s)                      search(store, q, mode="full")
+  engine.two_phase(q, s, k)              search(store, q, mode="two_phase", k)
+  engine.sharded_two_phase(q, s, mesh)   search(store.shard(mesh, axes), q,
+                                                mode="two_phase", k)
+  memory.search(state, q, cfg, ...)      search(store, q, ...)
+  memory.distributed_search(state, ...)  search(store.shard(mesh, axes), ...)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+MODES = ("full", "two_phase", "ideal")
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchRequest:
+    """What to search. Hashable -> usable as a jit-static argument.
+
+    mode:    'full'       exact noisy MCAM search of every store row;
+             'two_phase'  MXU shortlist by ideal digital distance + exact
+                          noisy rescore of the top-k candidates (the
+                          production serving path);
+             'ideal'      ideal-digital-distance top-k only, no rescore
+                          (the cheapest serving path).
+    k:       candidate count for 'two_phase' / 'ideal' (ignored by 'full').
+    backend: 'auto' defers to the engine's backend; any other value
+             ('ref' | 'pallas' | 'mxu' | 'fused') overrides it per request.
+    axes:    shard axes override; None defers to the store's own sharding
+             (`MemoryStore.shard` records mesh + axes on the store).
+    """
+
+    mode: str = "two_phase"
+    k: int = 64
+    backend: str = "auto"
+    axes: tuple | None = None
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(
+                f"unknown search mode {self.mode!r}; expected one of {MODES}")
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["votes", "dist", "indices", "labels"],
+         meta_fields=["iterations"])
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    """One result type for every mode/backend/sharding.
+
+    votes:      (B, K) MCAM vote scores (-inf on masked/empty candidates);
+                for mode='full', K == store rows; for 'ideal', votes==-dist.
+    dist:       (B, K) ideal digital AVSS distance (masked rows additionally
+                carry the integer-exact SHORTLIST_MASK_PENALTY).
+    indices:    (B, K) global store rows of each candidate.
+    labels:     (B, K) candidate labels (-1 on masked/empty candidates).
+    iterations: word-line cycles per query (python int; static metadata).
+    """
+
+    votes: jax.Array
+    dist: jax.Array
+    indices: jax.Array
+    labels: jax.Array
+    iterations: int = 0
+
+    def best(self) -> jax.Array:
+        """(B,) position of the best candidate per query: max votes, vote
+        ties broken exactly by ideal digital distance, then by index
+        (stable argmin) -- the paper's retrieval rule."""
+        top = self.votes.max(axis=-1, keepdims=True)
+        return jnp.argmin(jnp.where(self.votes == top, self.dist, jnp.inf),
+                          axis=-1)
+
+    def predict(self) -> jax.Array:
+        """(B,) 1-NN label prediction (label of `best()` per query)."""
+        return jnp.take_along_axis(self.labels, self.best()[:, None], 1)[:, 0]
+
+    def asdict(self) -> dict:
+        """Legacy result-dict view (the pre-redesign contract)."""
+        return {"votes": self.votes, "dist": self.dist,
+                "indices": self.indices, "labels": self.labels,
+                "iterations": self.iterations}

@@ -1,4 +1,12 @@
-"""The RetrievalEngine: one object, three search paths, three backends.
+"""The RetrievalEngine: one `search()` entry point, one typed contract.
+
+`search(store, queries, SearchRequest) -> SearchResult` subsumes every
+retrieval path in the framework: full exact search, the two-phase
+shortlist+rescore serving pipeline, and the cheap ideal-distance path --
+unsharded or row-sharded (the store carries its own mesh/axes, see
+repro/engine/store.py). The pre-redesign methods (`full`, `two_phase`,
+`sharded_two_phase`) remain as the raw-array layer underneath and for
+callers that do not hold a MemoryStore.
 
 All backends share one semantics contract (kernels/ref.py): for a given
 (SearchConfig, query batch, support store) the votes and distances are
@@ -25,6 +33,7 @@ import jax.numpy as jnp
 from repro.core import avss as avss_lib
 from repro.core import encodings as enc_lib
 from repro.core.avss import SearchConfig
+from repro.engine.api import SearchRequest, SearchResult
 from repro.engine.backends import resolve_backend
 from repro.kernels import ref as ref_kernels
 
@@ -46,13 +55,86 @@ class RetrievalEngine:
     def resolved_backend(self) -> str:
         return resolve_backend(self.backend, self.cfg.use_kernel)
 
+    # -- unified entry point -----------------------------------------------
+
+    def search(self, store, queries: jax.Array,
+               request: SearchRequest | None = None) -> SearchResult:
+        """Search a programmed MemoryStore: the one serving entry point.
+
+        store:    repro.engine.store.MemoryStore. Its write-time `proj` and
+                  `s_grid` layouts are used directly, so nothing re-runs
+                  `layout_support`/`support_projection` under jit; its
+                  (mesh, axes) metadata selects the sharded dispatch.
+        queries:  (B, dim) float embeddings (quantized with the store's
+                  calibrated range) or pre-quantized ints (passed through).
+        request:  SearchRequest (mode, k, backend, axes); default two-phase.
+
+        Results are bit-identical to the raw-array methods below for every
+        mode/backend/sharding (tests/test_engine.py, tests/test_store.py).
+        """
+        req = request if request is not None else SearchRequest()
+        eng = self if req.backend == "auto" else \
+            dataclasses.replace(self, backend=req.backend)
+        q = store.quantize_queries(queries)
+        valid = store.valid
+        iters = eng._iterations(q.shape[-1])
+
+        if store.mesh is not None and req.mode != "full":
+            axes = req.axes if req.axes is not None else store.axes
+            if req.mode == "two_phase":
+                from repro.engine import sharded
+                res = sharded.sharded_two_phase_search(
+                    q, store.values, eng.cfg, store.mesh, axes=axes,
+                    k=req.k, valid=valid, labels=store.labels,
+                    s_grid=store.s_grid)
+                # labels come from the per-shard fold (-1 on empty/pad
+                # rows): mask their votes without any global gather
+                votes = jnp.where(res["labels"] >= 0, res["votes"],
+                                  -jnp.inf)
+                return SearchResult(votes, res["dist"], res["indices"],
+                                    res["labels"], res["iterations"])
+            from repro.engine import sharded
+            from repro.kernels import ops as kernel_ops
+            q1h = kernel_ops.query_onehot(q, jnp.float32)
+            res = sharded.sharded_ideal_search(
+                q1h, store.proj, store.labels, store.mesh, axes=axes,
+                k=req.k)
+            return SearchResult(res["votes"], res["dist"], res["indices"],
+                                res["labels"], iters)
+
+        if req.mode == "full":
+            res = eng.full(q, store.values, s_grid=store.s_grid)
+            votes = jnp.where(valid[None, :], res["votes"], -jnp.inf)
+            indices = jnp.broadcast_to(
+                jnp.arange(store.capacity, dtype=jnp.int32), votes.shape)
+            labels = jnp.broadcast_to(store.labels, votes.shape)
+            return SearchResult(votes, res["dist"], indices, labels,
+                                res["iterations"])
+        if req.mode == "two_phase":
+            res = eng.two_phase(q, store.values, k=req.k, valid=valid,
+                                s_grid=store.s_grid, proj=store.proj)
+            labels = store.labels[res["indices"]]      # -1 on empty slots
+            votes = jnp.where(labels >= 0, res["votes"], -jnp.inf)
+            return SearchResult(votes, res["dist"], res["indices"], labels,
+                                res["iterations"])
+        # ideal: one f32 matmul against the write-time LUT projection --
+        # the same exact integer distances the sharded ideal path computes
+        from repro.kernels import ops as kernel_ops
+        q1h = kernel_ops.query_onehot(q, jnp.float32)
+        dist = q1h @ store.proj.astype(jnp.float32).T
+        dist = jnp.where(valid[None, :], dist, jnp.inf)
+        neg, idx = jax.lax.top_k(-dist, min(req.k, store.capacity))
+        return SearchResult(neg, -neg, idx, store.labels[idx], iters)
+
     # -- phase-0 helpers ---------------------------------------------------
 
-    def _grids(self, q_values: jax.Array, s_values: jax.Array):
+    def _grids(self, q_values: jax.Array, s_values: jax.Array,
+               s_grid: jax.Array | None = None):
         cfg = self.cfg
         enc = cfg.enc
         sl = cfg.mcam.string_len
-        s_grid = avss_lib.layout_support(s_values, enc, sl)
+        if s_grid is None:                 # read-time layout (raw-array API)
+            s_grid = avss_lib.layout_support(s_values, enc, sl)
         q_grid = avss_lib.layout_query(q_values, enc, cfg.mode, sl)
         return q_grid, s_grid, enc.weights_array(), \
             jnp.asarray(cfg.mcam.thresholds())
@@ -64,16 +146,19 @@ class RetrievalEngine:
 
     # -- full exact search -------------------------------------------------
 
-    def full(self, q_values: jax.Array, s_values: jax.Array
-             ) -> dict[str, jax.Array]:
+    def full(self, q_values: jax.Array, s_values: jax.Array, *,
+             s_grid: jax.Array | None = None) -> dict[str, jax.Array]:
         """Exact noisy MCAM search of every store row.
 
         q_values: (B, d) ints -- in [0, 4) for AVSS, [0, levels) for SVSS.
         s_values: (N, d) ints in [0, levels).
+        s_grid:   optional write-time string grid (MemoryStore.s_grid);
+                  when omitted the layout is computed here, read-time.
         Returns {votes (B, N), dist (B, N), iterations}.
         """
         cfg = self.cfg
-        q_grid, s_grid, weights, thresholds = self._grids(q_values, s_values)
+        q_grid, s_grid, weights, thresholds = self._grids(q_values, s_values,
+                                                          s_grid)
         if self.resolved_backend == "ref":
             fn = partial(avss_lib._search_one_query, weights=weights,
                          cfg=cfg, thresholds=thresholds)
@@ -91,7 +176,8 @@ class RetrievalEngine:
     # -- phase-1 shortlist -------------------------------------------------
 
     def shortlist(self, q_values: jax.Array, s_values: jax.Array, k: int,
-                  valid: jax.Array | None = None
+                  valid: jax.Array | None = None,
+                  proj: jax.Array | None = None
                   ) -> tuple[jax.Array, jax.Array]:
         """Top-k supports by ideal digital AVSS distance.
 
@@ -103,6 +189,12 @@ class RetrievalEngine:
         SHORTLIST_MASK_PENALTY added to their distance, so they rank after
         every valid row (and keep their relative order, preserving backend
         and sharding bit-parity). Their returned dist includes the penalty.
+
+        proj: optional write-time LUT projection (MemoryStore.proj) for the
+        mxu/fused backends; identical to recomputing it from s_values (the
+        projection is a deterministic function of the values), just hoisted
+        out of the search. The ref backend always recomputes -- it is the
+        readable reference, and its distances are bit-identical anyway.
         """
         from repro.kernels import ops as kernel_ops
         cfg = self.cfg
@@ -111,12 +203,13 @@ class RetrievalEngine:
         backend = self.resolved_backend
         if backend == "fused":
             return kernel_ops.lut_shortlist(q_values, s_values, cfg.enc, k,
-                                            valid=valid)
+                                            valid=valid, proj=proj)
         if backend == "ref":
             lut = jnp.asarray(enc_lib.avss_sum_lut(cfg.enc), jnp.float32)
             dist = ref_kernels.avss_dist_ref(q_values, s_values, lut)
         else:  # pallas / mxu: LUT matmul kernel
-            dist = kernel_ops.avss_ideal_dist(q_values, s_values, cfg.enc)
+            dist = kernel_ops.avss_ideal_dist(q_values, s_values, cfg.enc,
+                                              proj=proj)
         if valid is not None:
             dist = dist + jnp.where(valid, 0.0,
                                     kernel_ops.SHORTLIST_MASK_PENALTY)[None]
@@ -126,10 +219,13 @@ class RetrievalEngine:
     # -- two-phase search --------------------------------------------------
 
     def two_phase(self, q_values: jax.Array, s_values: jax.Array,
-                  k: int = 64, valid: jax.Array | None = None
-                  ) -> dict[str, jax.Array]:
+                  k: int = 64, valid: jax.Array | None = None, *,
+                  s_grid: jax.Array | None = None,
+                  proj: jax.Array | None = None) -> dict[str, jax.Array]:
         """Shortlist + exact noisy rescore (beyond-paper TPU pipeline).
 
+        s_grid / proj: optional write-time layouts (MemoryStore fields);
+        omitted -> recomputed here, read-time, with identical results.
         Returns {votes (B, k), dist (B, k) ideal shortlist distances
         (masked rows carry the mask penalty), indices (B, k) global support
         rows, iterations}. Votes are bit-identical to `full` for every
@@ -137,8 +233,10 @@ class RetrievalEngine:
         """
         from repro.kernels import ops as kernel_ops
         cfg = self.cfg
-        dist, idx = self.shortlist(q_values, s_values, k, valid=valid)
-        q_grid, s_grid, weights, thresholds = self._grids(q_values, s_values)
+        dist, idx = self.shortlist(q_values, s_values, k, valid=valid,
+                                   proj=proj)
+        q_grid, s_grid, weights, thresholds = self._grids(q_values, s_values,
+                                                          s_grid)
         votes = kernel_ops.rescore_shortlist(
             q_grid, s_grid, idx, weights, cfg, thresholds)
         return {"votes": votes, "dist": dist, "indices": idx,

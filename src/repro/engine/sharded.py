@@ -3,8 +3,12 @@
 Two flavours:
 
   sharded_two_phase_search   per-shard MXU shortlist + exact noisy rescore,
-                             then all-gather + global top-k merge. Votes are
-                             BIT-IDENTICAL to the single-device two-phase.
+                             then all-gather + global top-k merge (candidate
+                             labels folded into the gather from per-shard
+                             lookups). Votes are BIT-IDENTICAL to the
+                             single-device two-phase. Ragged stores arrive
+                             pre-padded by MemoryStore.shard (label -1 pad
+                             rows, masked by the phase-1 penalty).
   sharded_ideal_search       ideal-digital-distance only (the cheap serving
                              path formerly inlined in core/memory.py).
 
@@ -54,17 +58,26 @@ def _gather_candidates(x: jax.Array, axes) -> jax.Array:
 
 def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
                              cfg: SearchConfig, mesh, axes=("data",),
-                             k: int = 64, valid: jax.Array | None = None
+                             k: int = 64, valid: jax.Array | None = None,
+                             labels: jax.Array | None = None,
+                             s_grid: jax.Array | None = None
                              ) -> dict[str, jax.Array]:
     """Two-phase AVSS over a store row-sharded on `axes`.
 
     q_values: (B, d) ints in [0, 4), replicated.
-    s_values: (N, d) ints, row-sharded (N divisible by the shard count).
+    s_values: (N, d) ints, row-sharded (N divisible by the shard count;
+    `MemoryStore.shard` pads ragged splits with label -1 rows first).
     valid: optional (N,) bool, row-sharded like s_values; masked rows get
     the integer-exact SHORTLIST_MASK_PENALTY on their phase-1 distance.
-    Returns {votes (B, k), dist (B, k), indices (B, k) global rows,
-    iterations} -- bit-identical to RetrievalEngine.two_phase(q, s, k,
-    valid) on a single device.
+    labels: optional (N,) int32, row-sharded. When given, each shard looks
+    up its local candidates' labels and contributes them to the all-gather
+    (the merge then never touches the globally-sharded label column), and
+    the result gains a "labels" key.
+    s_grid: optional (N, seg, L, sl) write-time string grid (row-sharded,
+    MemoryStore.s_grid); omitted -> each shard lays out its rows here.
+    Returns {votes (B, k), dist (B, k), indices (B, k) global rows
+    [, labels (B, k)], iterations} -- bit-identical to
+    RetrievalEngine.two_phase(q, s, k, valid) on a single device.
     """
     from jax.experimental.shard_map import shard_map
     from repro.kernels import ops as kernel_ops
@@ -75,7 +88,8 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
     N = s_values.shape[0]
     assert N % n_shards == 0, (
-        f"store rows ({N}) must divide evenly over {n_shards} shards")
+        f"store rows ({N}) must divide evenly over {n_shards} shards "
+        f"(MemoryStore.shard pads ragged splits)")
     k = min(k, N)
     k_loc = min(k, N // n_shards)
 
@@ -90,8 +104,19 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
     if valid is None:
         # keep the shard_map arity fixed; +0.0 is exact, parity unaffected
         valid = jnp.ones((N,), bool)
+    # optional row-sharded extras keep the arity dynamic but the specs tied
+    extras, extra_specs = [], []
+    if labels is not None:
+        extras.append(labels)
+        extra_specs.append(P(axes))
+    if s_grid is not None:
+        extras.append(s_grid)
+        extra_specs.append(P(axes))
 
-    def local(q1h_, q_grid_, s_loc, valid_loc):
+    def local(q1h_, q_grid_, s_loc, valid_loc, *rest):
+        rest = list(rest)
+        labels_loc = rest.pop(0) if labels is not None else None
+        s_grid_loc = rest.pop(0) if s_grid is not None else None
         offset = _shard_index(mesh, axes) * jnp.int32(s_loc.shape[0])
         # phase 1 on local rows: exact integer-valued distances on the MXU
         # (same LUT projection as kernels/ops.support_projection)
@@ -102,27 +127,37 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
         neg, idx_loc = jax.lax.top_k(-dist, k_loc)
         gidx = idx_loc + offset
         # phase 2 on local candidates, GLOBAL indices for the noise counters
-        s_grid_loc = avss_lib.layout_support(s_loc, enc, sl)
+        if s_grid_loc is None:                         # read-time layout
+            s_grid_loc = avss_lib.layout_support(s_loc, enc, sl)
         votes = kernel_ops.rescore_shortlist(
             q_grid_, s_grid_loc, idx_loc, weights, cfg, thresholds,
             noise_idx=gidx)
-        # merge: stable sort by distance == (distance, global row) order
+        # merge: stable sort by distance == (distance, global row) order.
+        # Each shard contributes its candidates' LOCAL label lookups to the
+        # gather, so the merge output needs no post-hoc global label gather.
         d_all = _gather_candidates(-neg, axes)
         v_all = _gather_candidates(votes, axes)
         i_all = _gather_candidates(gidx, axes)
         order = jnp.argsort(d_all, axis=-1, stable=True)[:, :k]
         take = lambda x: jnp.take_along_axis(x, order, axis=1)
-        return take(v_all), take(d_all), take(i_all)
+        outs = (take(v_all), take(d_all), take(i_all))
+        if labels_loc is not None:
+            l_all = _gather_candidates(labels_loc[idx_loc], axes)
+            outs = outs + (take(l_all),)
+        return outs
 
-    votes, dist, indices = shard_map(
+    out = shard_map(
         local, mesh=mesh,
-        in_specs=(P(), P(), P(axes), P(axes)),
-        out_specs=(P(), P(), P()),
+        in_specs=(P(), P(), P(axes), P(axes), *extra_specs),
+        out_specs=(P(),) * (3 + (labels is not None)),
         check_rep=False,
-    )(q1h, q_grid, s_values, valid)
-    return {"votes": votes, "dist": dist, "indices": indices,
-            "iterations": avss_lib.search_iterations(
-                q_values.shape[-1], enc, "avss", sl)}
+    )(q1h, q_grid, s_values, valid, *extras)
+    res = {"votes": out[0], "dist": out[1], "indices": out[2],
+           "iterations": avss_lib.search_iterations(
+               q_values.shape[-1], enc, "avss", sl)}
+    if labels is not None:
+        res["labels"] = out[3]
+    return res
 
 
 def sharded_ideal_search(q_onehot: jax.Array, proj: jax.Array,

@@ -1,0 +1,250 @@
+"""MemoryStore: the programmed MCAM memory as an immutable registered pytree.
+
+The paper's premise is that support vectors are *programmed once* into MCAM
+strings and searched many times: MTMC encoding happens at write time (Sec.
+3.1) and AVSS reads the fixed layout (Sec. 3.2). The store mirrors that --
+`write` materialises everything a search ever needs:
+
+  values   (N, d)  int32   quantized support values (ring buffer)
+  proj     (N, 4d) bf16    AVSS LUT projection (phase-1 MXU shortlists)
+  s_grid   (N, seg, L, sl) int8  string-grid layout (full search / rescore)
+  labels   (N,)    int32   class / token labels; -1 marks an empty slot
+                           (never written, or a ragged-shard pad row)
+  size     ()      int32   total writes so far (monotonic; ring position)
+  lo, hi   ()      f32     calibrated quantization range
+
+so searches -- including the decode loop `serve --retrieval` jits -- run
+against write-time constants instead of re-running `layout_support` /
+`support_projection` per call. Sharding is a store property:
+`shard(mesh, axes)` row-shards the store (padding ragged splits with
+label -1 rows that the integer-exact mask penalty ranks last) and records
+(mesh, axes) as static metadata, making `RetrievalEngine.search` dispatch
+shard-aware with no caller plumbing.
+
+All update methods are functional (returning a new store); the store is a
+pytree, so it passes through jit / shard_map / eval_shape like any array
+tree, with (cfg, mesh, axes) as static aux data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import avss as avss_lib
+from repro.core.memory import MemoryConfig
+from repro.kernels import ops as kernel_ops
+
+
+def _quantize(x: jax.Array, levels: int, lo, hi) -> jax.Array:
+    scale = (levels - 1) / (hi - lo)
+    q = jnp.round((jnp.clip(x, lo, hi) - lo) * scale)
+    return jnp.clip(q, 0, levels - 1).astype(jnp.int32)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["values", "proj", "s_grid", "labels", "size",
+                      "lo", "hi"],
+         meta_fields=["cfg", "mesh", "axes"])
+@dataclasses.dataclass(frozen=True)
+class MemoryStore:
+    """Immutable programmed MCAM store (see module docstring)."""
+
+    values: jax.Array
+    proj: jax.Array
+    s_grid: jax.Array
+    labels: jax.Array
+    size: jax.Array
+    lo: jax.Array
+    hi: jax.Array
+    cfg: MemoryConfig
+    mesh: object = None
+    axes: tuple = ()
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def create(cls, cfg: MemoryConfig) -> "MemoryStore":
+        """Empty store: every slot reads as value 0 with label -1, and the
+        write-time artifacts (proj, s_grid) are CONSISTENT with value 0 --
+        exactly what a later `write` of value 0 would program. This keeps
+        empty slots and written slots indistinguishable to phase 1 except
+        through the label mask, which is what preserves bit-parity between
+        ragged-pad rows, empty slots, and the unsharded search."""
+        enc = cfg.search.enc
+        zeros = jnp.zeros((cfg.capacity, cfg.dim), jnp.int32)
+        return cls(
+            values=zeros,
+            proj=kernel_ops.support_projection(zeros, enc),
+            s_grid=_layout(zeros, cfg),
+            labels=jnp.full((cfg.capacity,), -1, jnp.int32),
+            size=jnp.zeros((), jnp.int32),
+            lo=jnp.zeros((), jnp.float32),
+            hi=jnp.ones((), jnp.float32),
+            cfg=cfg,
+        )
+
+    @classmethod
+    def from_quantized(cls, values: jax.Array, labels: jax.Array,
+                       search_cfg) -> "MemoryStore":
+        """Program an already-quantized support set (ints in [0, levels))
+        as a full store of capacity == len(values). The episodic evaluation
+        path (examples/fsl_omniglot.py) quantizes asymmetrically per
+        episode and lands here. Every slot is written, so the layouts are
+        built directly (no empty-slot init pass)."""
+        n, d = values.shape
+        cfg = MemoryConfig(capacity=n, dim=d, search=search_cfg)
+        v = values.astype(jnp.int32)
+        return cls(
+            values=v,
+            proj=kernel_ops.support_projection(v, cfg.search.enc),
+            s_grid=_layout(v, cfg),
+            labels=labels.astype(jnp.int32),
+            size=jnp.asarray(n, jnp.int32),
+            lo=jnp.zeros((), jnp.float32),
+            hi=jnp.ones((), jnp.float32),
+            cfg=cfg,
+        )
+
+    @classmethod
+    def from_state(cls, state: dict, cfg: MemoryConfig) -> "MemoryStore":
+        """Adopt a legacy `core.memory` state dict (pre-redesign contract).
+        Dicts from old checkpoints may lack the write-time `s_grid`; it is
+        derived from `values` (deterministic, so results stay identical)."""
+        s_grid = state.get("s_grid")
+        if s_grid is None:
+            s_grid = _layout(state["values"], cfg)
+        return cls(values=state["values"], proj=state["proj"],
+                   s_grid=s_grid, labels=state["labels"],
+                   size=state["size"], lo=state["lo"], hi=state["hi"],
+                   cfg=cfg)
+
+    def to_state(self) -> dict:
+        """Legacy state-dict view (the pre-redesign `core.memory` contract,
+        plus the write-time `s_grid`)."""
+        return {"values": self.values, "proj": self.proj,
+                "s_grid": self.s_grid, "labels": self.labels,
+                "size": self.size, "lo": self.lo, "hi": self.hi}
+
+    # -- derived properties --------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        """Physical rows, including any ragged-shard pad rows."""
+        return self.values.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.values.shape[1]
+
+    @property
+    def valid(self) -> jax.Array:
+        """(N,) bool: slots holding a written support (pad rows and
+        never-written slots carry label -1 and are masked out of phase 1
+        via the integer-exact SHORTLIST_MASK_PENALTY)."""
+        return self.labels >= 0
+
+    # -- programming ---------------------------------------------------------
+
+    def calibrate(self, vectors: jax.Array) -> "MemoryStore":
+        """Set the quantization range from a sample of embeddings (std
+        clipping clamped to the data extent, paper Sec. 3.3). Must run
+        before the first write."""
+        mu, sd = vectors.mean(), vectors.std() + 1e-8
+        lo = jnp.maximum(mu - self.cfg.clip_std * sd, vectors.min())
+        hi = jnp.minimum(mu + self.cfg.clip_std * sd, vectors.max() + 1e-8)
+        return dataclasses.replace(self, lo=lo, hi=hi)
+
+    def write(self, vectors: jax.Array, labels: jax.Array) -> "MemoryStore":
+        """Program a batch of float support embeddings (ring buffer).
+
+        Write-time MCAM programming: quantization, the MTMC/AVSS LUT
+        projection AND the string-grid layout are all materialised here,
+        once, so every later search jits against constants. Batches larger
+        than the capacity are rejected (a single batch would overwrite
+        itself mid-write)."""
+        n = vectors.shape[0]
+        ring = self.cfg.capacity
+        assert n <= ring, f"write batch ({n}) exceeds capacity ({ring})"
+        v = _quantize(vectors, self.cfg.search.enc.levels, self.lo, self.hi)
+        start = self.size % ring
+        idx = (start + jnp.arange(n)) % ring
+        return self._program(idx, v, labels, n)
+
+    def _program(self, idx, v, labels, n) -> "MemoryStore":
+        enc = self.cfg.search.enc
+        return dataclasses.replace(
+            self,
+            values=self.values.at[idx].set(v),
+            proj=self.proj.at[idx].set(kernel_ops.support_projection(v, enc)),
+            s_grid=self.s_grid.at[idx].set(_layout(v, self.cfg)),
+            labels=self.labels.at[idx].set(labels.astype(jnp.int32)),
+            size=self.size + n,
+        )
+
+    def quantize_queries(self, queries: jax.Array) -> jax.Array:
+        """Float embeddings -> quantized query words ([0, 4) for AVSS,
+        [0, levels) for SVSS). Integer queries pass through untouched
+        (already quantized, e.g. the episodic evaluation path)."""
+        if jnp.issubdtype(queries.dtype, jnp.integer):
+            return queries
+        cfg = self.cfg.search
+        levels = 4 if cfg.mode == "avss" else cfg.enc.levels
+        return _quantize(queries, levels, self.lo, self.hi)
+
+    # -- sharding ------------------------------------------------------------
+
+    def shard(self, mesh, axes=("data",)) -> "MemoryStore":
+        """Row-shard the store over mesh `axes` and record the sharding as
+        a store property (RetrievalEngine.search dispatches on it).
+
+        Ragged splits are supported: when the row count does not divide the
+        shard count, the store is padded with label -1 rows programmed to
+        value 0 -- indistinguishable from never-written slots, so the mask
+        penalty ranks them after every valid row and top-k results stay
+        bit-identical to the unsharded search for k <= the unpadded row
+        count."""
+        axes = tuple(axes)
+        n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+        store = self._pad_rows((-self.capacity) % n_shards)
+        row = NamedSharding(mesh, P(axes))
+        rep = NamedSharding(mesh, P())
+        return dataclasses.replace(
+            store,
+            values=jax.device_put(store.values, row),
+            proj=jax.device_put(store.proj, row),
+            s_grid=jax.device_put(store.s_grid, row),
+            labels=jax.device_put(store.labels, row),
+            size=jax.device_put(store.size, rep),
+            lo=jax.device_put(store.lo, rep),
+            hi=jax.device_put(store.hi, rep),
+            mesh=mesh, axes=axes,
+        )
+
+    def _pad_rows(self, pad: int) -> "MemoryStore":
+        if pad == 0:
+            return self
+        enc = self.cfg.search.enc
+        zeros = jnp.zeros((pad, self.dim), jnp.int32)
+        cat = lambda a, b: jnp.concatenate([a, b], axis=0)
+        return dataclasses.replace(
+            self,
+            values=cat(self.values, zeros),
+            proj=cat(self.proj, kernel_ops.support_projection(zeros, enc)),
+            s_grid=cat(self.s_grid, _layout(zeros, self.cfg)),
+            labels=cat(self.labels, jnp.full((pad,), -1, jnp.int32)),
+        )
+
+
+def _layout(values: jax.Array, cfg: MemoryConfig) -> jax.Array:
+    """Write-time string-grid layout: (n, d) -> (n, seg, L, sl) int8 codes
+    (code words are in [0, 3]; int8 is what the kernels consume)."""
+    grid = avss_lib.layout_support(values, cfg.search.enc,
+                                   cfg.search.mcam.string_len)
+    return grid.astype(jnp.int8)

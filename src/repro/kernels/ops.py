@@ -106,10 +106,17 @@ def query_onehot(q_values: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
 
 
 def avss_ideal_dist(q_values: jax.Array, s_values: jax.Array, enc: Encoding,
-                    dtype=jnp.bfloat16) -> jax.Array:
-    """(B, N) exact digital AVSS distances on the MXU."""
+                    dtype=jnp.bfloat16, proj: jax.Array | None = None
+                    ) -> jax.Array:
+    """(B, N) exact digital AVSS distances on the MXU.
+
+    proj: optional precomputed write-time projection (MemoryStore.proj);
+    it IS support_projection(s_values, enc) -- a deterministic function of
+    the values -- so passing it changes nothing but when it is computed.
+    """
     q1h = query_onehot(q_values, dtype)
-    sp = support_projection(s_values, enc, dtype)
+    sp = support_projection(s_values, enc, dtype) if proj is None \
+        else proj.astype(dtype)
     B, K = q1h.shape
     N = sp.shape[0]
     tm, tn, tk = 8, 512, 512
@@ -175,12 +182,18 @@ def two_phase_search(q_values: jax.Array, s_values: jax.Array, cfg,
                      k: int = 64) -> dict[str, jax.Array]:
     """Full beyond-paper pipeline. cfg: repro.core.avss.SearchConfig (avss).
 
-    Backwards-compatible wrapper; the pipeline now lives in
-    repro.engine.RetrievalEngine.two_phase (MXU shortlist backend).
+    Backwards-compatible wrapper over the unified API: raw quantized arrays
+    are programmed into an anonymous MemoryStore and searched through
+    RetrievalEngine.search (MXU shortlist backend) -- results bit-identical
+    to the historical RetrievalEngine.two_phase(q, s, k) call.
     """
-    from repro.engine import RetrievalEngine
-    return RetrievalEngine(cfg, backend="mxu").two_phase(
-        q_values, s_values, k=k)
+    from repro.engine import MemoryStore, RetrievalEngine, SearchRequest
+    store = MemoryStore.from_quantized(
+        s_values, jnp.zeros((s_values.shape[0],), jnp.int32), cfg)
+    res = RetrievalEngine(cfg, backend="mxu").search(
+        store, q_values, SearchRequest(mode="two_phase", k=k))
+    return {"votes": res.votes, "dist": res.dist, "indices": res.indices,
+            "iterations": res.iterations}
 
 
 # Added to the phase-1 distance of masked-out support rows. A power of two,
@@ -192,7 +205,8 @@ SHORTLIST_MASK_PENALTY = 2.0 ** 22
 
 
 def lut_shortlist(q_values: jax.Array, s_values: jax.Array, enc: Encoding,
-                  k: int, dtype=jnp.bfloat16, valid: jax.Array | None = None
+                  k: int, dtype=jnp.bfloat16, valid: jax.Array | None = None,
+                  proj: jax.Array | None = None
                   ) -> tuple[jax.Array, jax.Array]:
     """Fused shortlist: (B, k) distances + indices without materialising the
     (B, N) distance matrix in HBM (kernels/shortlist.py).
@@ -200,10 +214,13 @@ def lut_shortlist(q_values: jax.Array, s_values: jax.Array, enc: Encoding,
     valid: optional (N,) bool; invalid rows get SHORTLIST_MASK_PENALTY added
     to their distance (folded into one extra LUT column so the kernel needs
     no mask plumbing) and therefore sort after every valid row.
+    proj: optional precomputed write-time projection (MemoryStore.proj),
+    bit-identical to recomputing it from s_values here.
     """
     from repro.kernels import shortlist as shortlist_kernel
     q1h = query_onehot(q_values, dtype)
-    sp = support_projection(s_values, enc, dtype)
+    sp = support_projection(s_values, enc, dtype) if proj is None \
+        else proj.astype(dtype)
     if valid is not None:
         ones = jnp.ones((q1h.shape[0], 1), q1h.dtype)
         pen = jnp.where(valid, 0.0, SHORTLIST_MASK_PENALTY)[:, None]

@@ -164,15 +164,17 @@ def _compile_step(cfg, shape, mesh, rules, tc, retrieval, unroll=False):
             cache_in = _with_shardings(cache_abs, c_shard)
             pos_in = jax.ShapeDtypeStruct((), jnp.int32)
             if retrieval:
-                from repro.core.memory import MemoryConfig, init_memory
+                from repro.core.memory import MemoryConfig
+                from repro.engine import MemoryStore
                 from jax.sharding import NamedSharding
                 from jax.sharding import PartitionSpec as P
                 mem_cfg = MemoryConfig(capacity=131072, dim=48)
-                mem_abs = jax.eval_shape(lambda: init_memory(mem_cfg))
+                mem_abs = jax.eval_shape(lambda: MemoryStore.create(mem_cfg))
                 row = NamedSharding(mesh, P(tuple(mesh.axis_names)))
                 rep = NamedSharding(mesh, P())
-                mem_shard = {k: (row if getattr(v, "ndim", 0) >= 1 else rep)
-                             for k, v in mem_abs.items()}
+                mem_shard = jax.tree_util.tree_map(
+                    lambda v: (row if getattr(v, "ndim", 0) >= 1 else rep),
+                    mem_abs)
                 mem_in = _with_shardings(mem_abs, mem_shard)
                 step = steps_lib.make_serve_step_with_mcam(cfg, rules,
                                                            mem_cfg)

@@ -33,19 +33,18 @@ def serve(arch: str, smoke: bool, batch: int, steps: int, prompt_len: int,
 
     mstate = mem_cfg = None
     if retrieval:
-        from repro.core import memory as mem
         from repro.core.avss import SearchConfig
         from repro.core.memory import MemoryConfig
-        from repro.engine import RetrievalEngine
+        from repro.engine import MemoryStore, RetrievalEngine
         mem_cfg = MemoryConfig(capacity=1024, dim=min(48, cfg.d_model),
                                search=SearchConfig("mtmc", cl=8, mode="avss",
                                                    use_kernel="ref"))
-        mstate = mem.init_memory(mem_cfg)
         vecs = jax.random.normal(jax.random.PRNGKey(7), (256, mem_cfg.dim))
         toks = jax.random.randint(jax.random.PRNGKey(8), (256,), 0,
                                   cfg.vocab_size)
-        mstate = mem.calibrate(mstate, vecs, mem_cfg)
-        mstate = mem.write(mstate, vecs, toks, mem_cfg)
+        # program once at write time (values + proj + s_grid); the decode
+        # loop below jits against the store's constant layouts
+        mstate = MemoryStore.create(mem_cfg).calibrate(vecs).write(vecs, toks)
         engine = (RetrievalEngine(mem_cfg.search, backend=retrieval_backend)
                   if retrieval_mode == "two-phase" else None)
         step_fn = jax.jit(steps_lib.make_serve_step_with_mcam(

@@ -324,40 +324,44 @@ def make_serve_step_with_mcam(cfg: ModelConfig, rules: Rules, mem_cfg,
     memory and the vote distribution over memory labels (token ids) mixes
     with the LM softmax -- a kNN-LM head served from the simulated NAND-CAM.
 
+    The memory argument is a `repro.engine.MemoryStore` (registered pytree):
+    its write-time `proj` / `s_grid` layouts are jit constants of the decode
+    loop, so no step re-runs `layout_support` or `support_projection`.
+
     engine=None (default): dense ideal-distance softmax over the whole
     LUT-projected store (one bf16 matmul, rows sharded over the mesh).
-    engine=RetrievalEngine: two-phase retrieval -- MXU shortlist of the
-    top-k supports + exact noisy vote rescore -- and the mixture weights
-    come from the NOISY MCAM VOTES, so the served distribution reflects the
+    engine=RetrievalEngine: two-phase retrieval through the unified
+    `engine.search(store, q, SearchRequest)` -- MXU shortlist of the top-k
+    supports + exact noisy vote rescore -- and the mixture weights come
+    from the NOISY MCAM VOTES, so the served distribution reflects the
     simulated hardware's similarity judgement, not the ideal distance."""
-    from repro.core import memory as mem_lib
+    from repro.engine import SearchRequest
+    request = SearchRequest(mode="two_phase", k=k)
 
-    def serve_step(params, caches, batch, pos, mem_state):
+    def serve_step(params, caches, batch, pos, store):
         logits, caches, hidden = tfm.decode_step(
             params, cfg, batch, caches, pos, rules, return_hidden=True)
-        q = hidden[:, 0]                                      # (B, D)
-        qq = mem_lib.quantize_queries(mem_state, q[:, :mem_cfg.dim])
+        q = hidden[:, 0][:, :mem_cfg.dim]                     # (B, dim)
         if engine is None:
             from repro.kernels import ops as kops
             # ideal AVSS digital distance: one bf16 matmul against the
             # LUT-projected store (rows sharded over the whole mesh)
-            q1h = kops.query_onehot(qq, jnp.float32)          # (B, 4d)
-            dist = q1h @ mem_state["proj"].astype(jnp.float32).T  # (B, N)
+            q1h = kops.query_onehot(store.quantize_queries(q), jnp.float32)
+            dist = q1h @ store.proj.astype(jnp.float32).T     # (B, N)
             w = jax.nn.softmax(-dist / 10.0, axis=-1)
-            onehot = jax.nn.one_hot(mem_state["labels"], cfg.vocab_size,
+            onehot = jax.nn.one_hot(store.labels, cfg.vocab_size,
                                     dtype=w.dtype)
             p_mem = w @ onehot                                # (B, V)
         else:
-            res = engine.two_phase(qq, mem_state["values"], k=k,
-                                   valid=mem_state["labels"] >= 0)
-            valid = res["indices"] < mem_state["size"]        # (B, k)
+            res = engine.search(store, q, request)
+            valid = res.labels >= 0                           # (B, k)
             # weight by the exact noisy votes (higher = more similar); the
             # -1e30 fill + post-mask keeps an all-invalid row (store
             # sparser than k) a harmless zero contribution instead of NaN
             w = jax.nn.softmax(
-                jnp.where(valid, res["votes"] / 10.0, -1e30), axis=-1)
+                jnp.where(valid, res.votes / 10.0, -1e30), axis=-1)
             w = w * valid
-            labels = jnp.where(valid, mem_state["labels"][res["indices"]], 0)
+            labels = jnp.where(valid, res.labels, 0)
             onehot = jax.nn.one_hot(labels, cfg.vocab_size, dtype=w.dtype)
             p_mem = jnp.einsum("bk,bkv->bv", w, onehot)       # (B, V)
         p_lm = jax.nn.softmax(logits[:, 0], axis=-1)

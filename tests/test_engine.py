@@ -265,6 +265,42 @@ def test_sharded_two_phase_bit_identical():
         for key in ("votes", "dist", "indices", "labels"):
             np.testing.assert_array_equal(np.asarray(local[key]),
                                           np.asarray(dist[key]), err_msg=key)
+
+        # unified API: engine.search over a shard-aware MemoryStore must be
+        # bit-identical to the pre-redesign two_phase/sharded_two_phase --
+        # including a RAGGED (non-divisible) split: capacity 100 over 8
+        # shards pads to 104 rows with label -1 pad rows
+        from repro.engine import MemoryStore, SearchRequest
+        rcfg = MemoryConfig(capacity=100, dim=24,
+                            search=SearchConfig("mtmc", cl=8, mode="avss",
+                                                use_kernel="ref"))
+        rvecs = jax.random.normal(jax.random.PRNGKey(9), (100, 24))
+        rlabs = jnp.arange(100, dtype=jnp.int32) % 11
+        rstore = MemoryStore.create(rcfg).calibrate(rvecs).write(rvecs,
+                                                                 rlabs)
+        rq = rvecs[:6] + 0.03 * jax.random.normal(jax.random.PRNGKey(10),
+                                                  (6, 24))
+        reng = RetrievalEngine(rcfg.search)
+        req = SearchRequest(mode="two_phase", k=32)
+        # pre-redesign reference: raw-array two_phase + global label gather
+        rqv = rstore.quantize_queries(rq)
+        pre = reng.two_phase(rqv, rstore.values, k=32,
+                             valid=rstore.labels >= 0)
+        pre_labels = rstore.labels[pre["indices"]]
+        new_local = reng.search(rstore, rq, req)
+        np.testing.assert_array_equal(np.asarray(pre["votes"]),
+                                      np.asarray(new_local.votes))
+        np.testing.assert_array_equal(np.asarray(pre_labels),
+                                      np.asarray(new_local.labels))
+        mesh = jax.make_mesh((8,), ("data",))
+        rsharded = rstore.shard(mesh, ("data",))
+        assert rsharded.capacity == 104, rsharded.capacity
+        with mesh:
+            new_sh = reng.search(rsharded, rq, req)
+        for key in ("votes", "dist", "indices", "labels"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(new_local, key)),
+                np.asarray(getattr(new_sh, key)), err_msg=f"ragged/{key}")
         print("SHARDED-BIT-IDENTICAL")
     """
     env = dict(os.environ)
