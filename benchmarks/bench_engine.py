@@ -22,9 +22,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from benchmarks.common import time_us
 from repro.core.avss import SearchConfig
 from repro.core.mcam import MCAMConfig
+from repro.core.memory import MemoryConfig
 from repro.engine import (MemoryStore, RetrievalEngine, SearchRequest)
+from repro.engine.engine import IDEAL_FUSED_MIN_ROWS
 
 N, B, D, K = 2048, 16, 48, 64
+N_IDEAL = IDEAL_FUSED_MIN_ROWS       # large-N ideal path (4096)
+W = 256                              # streaming-write batch rows
 
 
 def run():
@@ -98,6 +102,45 @@ def run():
                  qps(us_ss) + f";shards={n_dev}"))
     np.testing.assert_array_equal(np.asarray(votes_tp["ref"]),
                                   np.asarray(votes_ss))
+
+    # streaming write (the paper's cheap operation): program a W-row batch
+    # into a ring store, unsharded scatter vs the shard-local write-through
+    # (1-device mesh here; the multi-shard shape lives in engine_sharded)
+    mcfg = MemoryConfig(capacity=N, dim=D, search=cfg)
+    wvecs = jax.random.normal(jax.random.PRNGKey(2), (W, D))
+    wlabs = jnp.arange(W, dtype=jnp.int32)
+    base = MemoryStore.create(mcfg).calibrate(wvecs)
+    f_w = jax.jit(lambda st, v, l: st.write(v, l).values)
+    us_w, _ = time_us(f_w, base, wvecs, wlabs, iters=3)
+    rows.append((f"engine/write_scatter_b{W}", us_w,
+                 f"rows_per_s={W / us_w * 1e6:.0f}"))
+    sbase = base.shard(mesh, ("data",))
+    with mesh:
+        f_ws = jax.jit(lambda st, v, l: st.write(v, l).values)
+        us_ws, vals_ws = time_us(f_ws, sbase, wvecs, wlabs, iters=3)
+    rows.append((f"engine/write_stream_b{W}_dev{n_dev}", us_ws,
+                 f"rows_per_s={W / us_ws * 1e6:.0f};shards={n_dev}"))
+    np.testing.assert_array_equal(np.asarray(f_w(base, wvecs, wlabs)),
+                                  np.asarray(vals_ws))
+
+    # large-N ideal serving: dense (B, N) matmul vs the fused shortlist
+    # kernel (HBM O(B*k + N*4d)); bit-parity asserted
+    isv = jax.random.randint(jax.random.PRNGKey(3), (N_IDEAL, D), 0,
+                             enc.levels)
+    istore = MemoryStore.from_quantized(
+        isv, jnp.arange(N_IDEAL, dtype=jnp.int32) % 128, cfg)
+    ireq = SearchRequest(mode="ideal", k=K)
+    f_id = {b: jax.jit(lambda st, q, e=RetrievalEngine(cfg, backend=b):
+                       e.search(st, q, ireq)) for b in ("ref", "fused")}
+    us_dense, res_dense = time_us(f_id["ref"], istore, qv, iters=3)
+    rows.append((f"engine/ideal_dense_N{N_IDEAL}", us_dense, qps(us_dense)))
+    us_fused, res_fused = time_us(f_id["fused"], istore, qv, iters=3)
+    rows.append((f"engine/ideal_fused_N{N_IDEAL}", us_fused,
+                 qps(us_fused)
+                 + f";speedup_vs_dense={us_dense / us_fused:.1f}x"))
+    for key in ("votes", "dist", "indices", "labels"):
+        np.testing.assert_array_equal(np.asarray(getattr(res_dense, key)),
+                                      np.asarray(getattr(res_fused, key)))
 
     # two-phase recall@k of the 1-NN decision vs the full search
     from repro.core import avss as avss_lib

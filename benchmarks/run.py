@@ -10,17 +10,25 @@ Suites:
   fig9     energy-accuracy Pareto fronts (bench_pareto)
   kernel   Pallas kernels + two-phase recall (bench_kernels)
   engine   retrieval engine: full vs two-phase vs sharded vs store-based
-           unified search (bench_engine)
-  engine_sharded  multi-device sharded scaling on a forced 8-device host
-           mesh (subprocess, like tests/test_distributed.py); writes
+           unified search, plus the streaming-write and large-N ideal
+           serving rows (bench_engine)
+  engine_sharded  multi-device sharded scaling (search AND shard-local
+           streaming writes) on a forced 8-device host mesh (subprocess,
+           like tests/test_distributed.py); writes
            results/bench_engine_sharded.json (CI artifact)
   roofline dry-run derived roofline terms (benchmarks.roofline; needs the
            dryrun sweep artifacts under results/dryrun)
+
+Every run also consolidates the rows of ALL executed suites into
+results/bench_summary.json (uploaded as a CI artifact by the weekly full
+job), so the perf trajectory is tracked PR-over-PR in one file.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 
 SUITES = {
@@ -34,6 +42,9 @@ SUITES = {
     "roofline": "benchmarks.roofline",
 }
 
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SUMMARY_PATH = os.path.join(ROOT, "results", "bench_summary.json")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -42,18 +53,41 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else set(SUITES)
     print("name,us_per_call,derived")
     failed = []
+    summary = {}
     import importlib
     for key, modname in SUITES.items():
         if key not in only:
             continue
         try:
             mod = importlib.import_module(modname)
+            suite_rows = []
             for name, us, derived in mod.run():
                 print(f"{name},{us:.1f},{derived}")
                 sys.stdout.flush()
+                suite_rows.append({"name": name, "us_per_call": us,
+                                   "derived": derived})
+            summary[key] = suite_rows
         except Exception as e:  # keep the harness going; report at the end
             failed.append((key, repr(e)))
             print(f"{key}/ERROR,0.0,{e!r}")
+    # merge into any existing summary: CI invokes the harness once per
+    # suite, and the artifact should accumulate them all
+    merged = {}
+    try:
+        with open(SUMMARY_PATH) as f:
+            prev = json.load(f)
+        merged = dict(prev.get("suites", {}))
+    except (OSError, ValueError):
+        pass
+    merged.update(summary)
+    os.makedirs(os.path.dirname(SUMMARY_PATH), exist_ok=True)
+    with open(SUMMARY_PATH, "w") as f:
+        json.dump({"generated_by": "benchmarks.run",
+                   "last_run": sorted(only & set(SUITES)),
+                   "failed": failed, "suites": merged}, f, indent=1)
+    print(f"# wrote {os.path.relpath(SUMMARY_PATH, ROOT)} "
+          f"({sum(len(v) for v in merged.values())} rows, "
+          f"{len(merged)} suite(s))")
     if failed:
         print(f"# {len(failed)} suite(s) failed: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -148,9 +148,9 @@ def distributed_search(state: dict, queries: jax.Array, cfg: MemoryConfig,
                "RetrievalEngine.search(store.shard(mesh, axes), queries, "
                "SearchRequest(...))")
     from repro.engine import RetrievalEngine, SearchRequest
-    # shard() is free on a state that shard_state already placed: padding
-    # short-circuits at 0 rows and device_put returns the same buffers
-    # when the sharding is unchanged
+    # shard() is idempotent: it re-shards from the logical cfg.capacity
+    # rows, so a state that shard_state already placed (possibly with
+    # ragged pad rows) lands on the identical padded layout again
     store = _store(state, cfg).shard(mesh, tuple(axes))
     req = SearchRequest(mode="two_phase" if exact else "ideal", k=k)
     return RetrievalEngine(cfg.search).search(store, queries, req).asdict()

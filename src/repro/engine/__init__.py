@@ -22,13 +22,14 @@ The serving contract (PR 2) is store-centric:
 from repro.engine.api import SearchRequest, SearchResult
 from repro.engine.backends import (BACKENDS, kernels_available,
                                    resolve_backend)
-from repro.engine.engine import RetrievalEngine
+from repro.engine.engine import IDEAL_FUSED_MIN_ROWS, RetrievalEngine
 from repro.engine.sharded import (sharded_ideal_search,
                                   sharded_two_phase_search)
 from repro.engine.store import MemoryStore
 
 __all__ = [
     "BACKENDS",
+    "IDEAL_FUSED_MIN_ROWS",
     "MemoryStore",
     "RetrievalEngine",
     "SearchRequest",

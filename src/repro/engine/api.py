@@ -68,12 +68,20 @@ class SearchResult:
     """One result type for every mode/backend/sharding.
 
     votes:      (B, K) MCAM vote scores (-inf on masked/empty candidates);
-                for mode='full', K == store rows; for 'ideal', votes==-dist.
+                for mode='full', K == store rows; for 'ideal', votes==-dist
+                on valid candidates (and -inf on masked ones).
     dist:       (B, K) ideal digital AVSS distance (masked rows additionally
-                carry the integer-exact SHORTLIST_MASK_PENALTY).
+                carry the integer-exact SHORTLIST_MASK_PENALTY -- in every
+                mode, 'ideal' included).
     indices:    (B, K) global store rows of each candidate.
     labels:     (B, K) candidate labels (-1 on masked/empty candidates).
     iterations: word-line cycles per query (python int; static metadata).
+
+    Sentinel: searching a store with NO valid candidates (empty, or entirely
+    ragged-pad rows) yields `predict() == -1` for every query -- every
+    candidate label is the never-written marker -1, so no arbitrary class
+    can win (asserted for every mode/backend/sharding in
+    tests/test_store.py).
     """
 
     votes: jax.Array
@@ -91,7 +99,8 @@ class SearchResult:
                           axis=-1)
 
     def predict(self) -> jax.Array:
-        """(B,) 1-NN label prediction (label of `best()` per query)."""
+        """(B,) 1-NN label prediction (label of `best()` per query);
+        -1 when the store held no valid candidate (see class docstring)."""
         return jnp.take_along_axis(self.labels, self.best()[:, None], 1)[:, 0]
 
     def asdict(self) -> dict:

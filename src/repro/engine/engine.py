@@ -37,6 +37,13 @@ from repro.engine.api import SearchRequest, SearchResult
 from repro.engine.backends import resolve_backend
 from repro.kernels import ref as ref_kernels
 
+# Unsharded `ideal` searches of stores at least this many rows route through
+# the fused Pallas shortlist kernel (kernels/shortlist.py) instead of
+# materialising the dense (B, N) distance matrix -- HBM traffic drops from
+# O(B*N) to O(B*k + N*4d), bit-identically (the fused kernel reproduces
+# lax.top_k's (distance, row) order exactly, ties included).
+IDEAL_FUSED_MIN_ROWS = 4096
+
 
 @dataclasses.dataclass(frozen=True)
 class RetrievalEngine:
@@ -54,6 +61,23 @@ class RetrievalEngine:
     @property
     def resolved_backend(self) -> str:
         return resolve_backend(self.backend, self.cfg.use_kernel)
+
+    def with_backend(self, backend: str) -> "RetrievalEngine":
+        """Engine with a per-request backend override, cached per instance:
+        a hot decode loop that sets `SearchRequest.backend` gets the SAME
+        engine object back on every call -- no rebuild, and closures keyed
+        on the engine (jit caches) keep hitting."""
+        if backend in ("auto", self.backend):
+            return self
+        cache = self.__dict__.get("_backend_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_backend_cache", cache)
+        eng = cache.get(backend)
+        if eng is None:
+            eng = dataclasses.replace(self, backend=backend)
+            cache[backend] = eng
+        return eng
 
     # -- unified entry point -----------------------------------------------
 
@@ -73,8 +97,7 @@ class RetrievalEngine:
         mode/backend/sharding (tests/test_engine.py, tests/test_store.py).
         """
         req = request if request is not None else SearchRequest()
-        eng = self if req.backend == "auto" else \
-            dataclasses.replace(self, backend=req.backend)
+        eng = self.with_backend(req.backend)
         q = store.quantize_queries(queries)
         valid = store.valid
         iters = eng._iterations(q.shape[-1])
@@ -99,7 +122,8 @@ class RetrievalEngine:
             res = sharded.sharded_ideal_search(
                 q1h, store.proj, store.labels, store.mesh, axes=axes,
                 k=req.k)
-            return SearchResult(res["votes"], res["dist"], res["indices"],
+            votes = jnp.where(res["labels"] >= 0, res["votes"], -jnp.inf)
+            return SearchResult(votes, res["dist"], res["indices"],
                                 res["labels"], iters)
 
         if req.mode == "full":
@@ -117,14 +141,31 @@ class RetrievalEngine:
             votes = jnp.where(labels >= 0, res["votes"], -jnp.inf)
             return SearchResult(votes, res["dist"], res["indices"], labels,
                                 res["iterations"])
-        # ideal: one f32 matmul against the write-time LUT projection --
-        # the same exact integer distances the sharded ideal path computes
+        # ideal: top-k by the exact integer-valued digital distance against
+        # the write-time LUT projection. Masked rows carry the integer-exact
+        # SHORTLIST_MASK_PENALTY (the same contract as two_phase / the
+        # sharded ideal path), so every route below is bit-identical. Large
+        # stores stream through the fused Pallas shortlist kernel -- HBM
+        # O(B*k + N*4d) instead of the dense (B, N) matrix; small stores and
+        # the ref backend keep the dense matmul as the readable reference.
         from repro.kernels import ops as kernel_ops
-        q1h = kernel_ops.query_onehot(q, jnp.float32)
-        dist = q1h @ store.proj.astype(jnp.float32).T
-        dist = jnp.where(valid[None, :], dist, jnp.inf)
-        neg, idx = jax.lax.top_k(-dist, min(req.k, store.capacity))
-        return SearchResult(neg, -neg, idx, store.labels[idx], iters)
+        k = min(req.k, store.capacity)
+        backend = eng.resolved_backend
+        if backend != "ref" and (store.capacity >= IDEAL_FUSED_MIN_ROWS
+                                 or backend == "fused"):
+            dist, idx = kernel_ops.lut_shortlist(
+                q, store.values, eng.cfg.enc, k, valid=valid,
+                proj=store.proj)
+        else:
+            q1h = kernel_ops.query_onehot(q, jnp.float32)
+            d = q1h @ store.proj.astype(jnp.float32).T
+            d = d + jnp.where(valid, 0.0,
+                              kernel_ops.SHORTLIST_MASK_PENALTY)[None]
+            neg, idx = jax.lax.top_k(-d, k)
+            dist = -neg
+        labels = store.labels[idx]
+        votes = jnp.where(labels >= 0, -dist, -jnp.inf)
+        return SearchResult(votes, dist, idx, labels, iters)
 
     # -- phase-0 helpers ---------------------------------------------------
 

@@ -166,16 +166,24 @@ def sharded_ideal_search(q_onehot: jax.Array, proj: jax.Array,
     """Ideal-digital-distance block search (no rescore; cheap serving path).
 
     q_onehot: (B, 4d) replicated query one-hots; proj: (N, 4d) row-sharded
-    LUT projections; labels: (N,) row-sharded (< 0 marks empty slots).
+    LUT projections; labels: (N,) row-sharded (< 0 marks empty slots --
+    their distance carries the integer-exact SHORTLIST_MASK_PENALTY, the
+    same masking the two-phase and unsharded ideal paths use, so results
+    stay bit-identical to the single-device fused/dense ideal search even
+    when masked rows reach the top-k).
     Collective volume is O(B * k * shards), independent of capacity.
     Returns {dist, votes=-dist, labels, indices} each (B, k').
     """
     from jax.experimental.shard_map import shard_map
 
+    from repro.kernels import ops as kernel_ops
+
     def local(qr, proj_loc, labels_loc):
         offset = _shard_index(mesh, axes) * jnp.int32(proj_loc.shape[0])
         dist = qr @ proj_loc.astype(jnp.float32).T             # (B, N_loc)
-        dist = jnp.where(labels_loc[None, :] < 0, jnp.inf, dist)
+        dist = dist + jnp.where(labels_loc < 0,
+                                kernel_ops.SHORTLIST_MASK_PENALTY,
+                                0.0)[None, :]
         kk = min(k, proj_loc.shape[0])
         neg, idx = jax.lax.top_k(-dist, kk)
         d_all = _gather_candidates(-neg, axes)

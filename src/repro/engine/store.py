@@ -19,7 +19,17 @@ against write-time constants instead of re-running `layout_support` /
 `shard(mesh, axes)` row-shards the store (padding ragged splits with
 label -1 rows that the integer-exact mask penalty ranks last) and records
 (mesh, axes) as static metadata, making `RetrievalEngine.search` dispatch
-shard-aware with no caller plumbing.
+shard-aware with no caller plumbing. Re-sharding always starts from the
+LOGICAL `cfg.capacity` rows, so `shard` is idempotent (pads never pad).
+
+Writes on a sharded store stay shard-LOCAL (the paper's economics: NAND
+programming is the cheap in-place operation). `write` dispatches to a
+shard_map write-through in which each shard computes which slice of the
+(replicated) incoming batch lands in its own ring segment and programs
+values/proj/s_grid/labels in place -- the compiled HLO contains no
+cross-device collectives and no scatter (tests/test_store.py), and the
+result is bit-identical to the unsharded scatter path, including ragged
+pads and ring wraparound across shard boundaries.
 
 All update methods are functional (returning a new store); the store is a
 pytree, so it passes through jit / shard_map / eval_shape like any array
@@ -51,10 +61,18 @@ def _quantize(x: jax.Array, levels: int, lo, hi) -> jax.Array:
 @partial(jax.tree_util.register_dataclass,
          data_fields=["values", "proj", "s_grid", "labels", "size",
                       "lo", "hi"],
-         meta_fields=["cfg", "mesh", "axes"])
+         meta_fields=["cfg", "mesh", "axes", "calibrated"])
 @dataclasses.dataclass(frozen=True)
 class MemoryStore:
-    """Immutable programmed MCAM store (see module docstring)."""
+    """Immutable programmed MCAM store (see module docstring).
+
+    `calibrated` (static metadata) records whether `calibrate` has set the
+    quantization range: embeddings quantized against the default (lo=0,
+    hi=1) range are garbage words, so `write` refuses ANY input on a
+    never-calibrated store (it always quantizes; already-quantized supports
+    go through `from_quantized`), and `quantize_queries` refuses float
+    queries (integer queries are already words and pass through).
+    """
 
     values: jax.Array
     proj: jax.Array
@@ -66,6 +84,7 @@ class MemoryStore:
     cfg: MemoryConfig
     mesh: object = None
     axes: tuple = ()
+    calibrated: bool = False
 
     # -- construction --------------------------------------------------------
 
@@ -120,10 +139,13 @@ class MemoryStore:
         s_grid = state.get("s_grid")
         if s_grid is None:
             s_grid = _layout(state["values"], cfg)
+        # legacy dicts carry no calibration flag; adopt their lo/hi as-is
+        # (the pre-redesign API managed calibration itself) so the shims in
+        # core/memory.py stay bit-identical.
         return cls(values=state["values"], proj=state["proj"],
                    s_grid=s_grid, labels=state["labels"],
                    size=state["size"], lo=state["lo"], hi=state["hi"],
-                   cfg=cfg)
+                   cfg=cfg, calibrated=True)
 
     def to_state(self) -> dict:
         """Legacy state-dict view (the pre-redesign `core.memory` contract,
@@ -155,11 +177,27 @@ class MemoryStore:
     def calibrate(self, vectors: jax.Array) -> "MemoryStore":
         """Set the quantization range from a sample of embeddings (std
         clipping clamped to the data extent, paper Sec. 3.3). Must run
-        before the first write."""
+        before the first write -- re-calibrating a store that already holds
+        programmed rows would silently make their quantized words
+        inconsistent with the new range, so that raises."""
+        try:
+            written = int(self.size) > 0
+        except jax.errors.JAXTypeError:
+            # under tracing (eval_shape / jit) size has no concrete value,
+            # so the guard cannot run -- it protects the eager setup path,
+            # which is where calibration happens in practice
+            written = False
+        if written:
+            raise ValueError(
+                f"MemoryStore.calibrate: the store already holds "
+                f"{int(self.size)} programmed row(s); their quantized words "
+                f"were produced under the previous range and would become "
+                f"inconsistent with the new one. Calibrate before the first "
+                f"write (or build a fresh store and re-program it).")
         mu, sd = vectors.mean(), vectors.std() + 1e-8
         lo = jnp.maximum(mu - self.cfg.clip_std * sd, vectors.min())
         hi = jnp.minimum(mu + self.cfg.clip_std * sd, vectors.max() + 1e-8)
-        return dataclasses.replace(self, lo=lo, hi=hi)
+        return dataclasses.replace(self, lo=lo, hi=hi, calibrated=True)
 
     def write(self, vectors: jax.Array, labels: jax.Array) -> "MemoryStore":
         """Program a batch of float support embeddings (ring buffer).
@@ -168,11 +206,27 @@ class MemoryStore:
         projection AND the string-grid layout are all materialised here,
         once, so every later search jits against constants. Batches larger
         than the capacity are rejected (a single batch would overwrite
-        itself mid-write)."""
+        itself mid-write).
+
+        On a sharded store the write is a shard_map write-through: each
+        shard programs the slice of the batch that lands in its own ring
+        segment, locally -- no cross-device scatter (streaming-ingest
+        path; bit-identical to the unsharded write)."""
         n = vectors.shape[0]
         ring = self.cfg.capacity
         assert n <= ring, f"write batch ({n}) exceeds capacity ({ring})"
+        if n == 0:
+            return self
+        if not self.calibrated:
+            raise ValueError(
+                "MemoryStore.write: writing to a never-calibrated store "
+                "would quantize against the default (lo=0, hi=1) range and "
+                "program garbage words; call store.calibrate(sample) before "
+                "the first write (already-quantized supports go through "
+                "MemoryStore.from_quantized instead).")
         v = _quantize(vectors, self.cfg.search.enc.levels, self.lo, self.hi)
+        if self.mesh is not None:
+            return self._program_streamed(v, labels, n)
         start = self.size % ring
         idx = (start + jnp.arange(n)) % ring
         return self._program(idx, v, labels, n)
@@ -188,12 +242,75 @@ class MemoryStore:
             size=self.size + n,
         )
 
+    def _program_streamed(self, v, labels, n) -> "MemoryStore":
+        """Shard-local write-through: program a quantized batch into a
+        row-sharded store with NO cross-device data movement.
+
+        The batch (and its write-time projection/layout, computed once,
+        replicated) enters the shard_map unsharded; each shard derives, for
+        every row of its own contiguous block, which batch slot (if any)
+        the ring assigns to that global row, and selects it in place. The
+        ring index math is identical to the scatter path's
+        `(start + arange(n)) % capacity`, inverted per row -- so the result
+        is bit-identical, including wraparound across shard boundaries --
+        and ragged pad rows (global row >= cfg.capacity) are never written.
+        Compiled HLO carries no all-gather/all-to-all/scatter collectives
+        (asserted in tests/test_store.py)."""
+        from jax.experimental.shard_map import shard_map
+
+        from repro.engine.sharded import _shard_index
+
+        mesh, axes = self.mesh, self.axes
+        ring = self.cfg.capacity
+        enc = self.cfg.search.enc
+        start = (self.size % ring).astype(jnp.int32)
+        batch = (v, kernel_ops.support_projection(v, enc),
+                 _layout(v, self.cfg), labels.astype(jnp.int32))
+
+        def local(start_, v_, proj_, grid_, labels_,
+                  values_loc, proj_loc, grid_loc, labels_loc):
+            rows = values_loc.shape[0]
+            g = _shard_index(mesh, axes) * jnp.int32(rows) \
+                + jnp.arange(rows, dtype=jnp.int32)       # global row ids
+            # batch slot that the ring assigns to global row g (jnp.mod is
+            # non-negative for a positive divisor, so pre-start rows wrap)
+            j = jnp.mod(g - start_, jnp.int32(ring))
+            written = (j < n) & (g < ring)                # pads stay pads
+            jc = jnp.minimum(j, jnp.int32(n - 1))         # safe gather idx
+
+            def sel(new, old):
+                w = written.reshape((-1,) + (1,) * (old.ndim - 1))
+                return jnp.where(w, new[jc].astype(old.dtype), old)
+
+            return (sel(v_, values_loc), sel(proj_, proj_loc),
+                    sel(grid_, grid_loc), sel(labels_, labels_loc))
+
+        out = shard_map(
+            local, mesh=mesh,
+            in_specs=(P(),) * 5 + (P(axes),) * 4,
+            out_specs=(P(axes),) * 4,
+            check_rep=False,
+        )(start, *batch, self.values, self.proj, self.s_grid, self.labels)
+        return dataclasses.replace(
+            self, values=out[0], proj=out[1], s_grid=out[2], labels=out[3],
+            size=self.size + n)
+
     def quantize_queries(self, queries: jax.Array) -> jax.Array:
         """Float embeddings -> quantized query words ([0, 4) for AVSS,
         [0, levels) for SVSS). Integer queries pass through untouched
-        (already quantized, e.g. the episodic evaluation path)."""
+        (already quantized, e.g. the episodic evaluation path). Float
+        queries on a never-calibrated store raise: quantizing against the
+        default (lo=0, hi=1) range returns garbage words."""
         if jnp.issubdtype(queries.dtype, jnp.integer):
             return queries
+        if not self.calibrated:
+            raise ValueError(
+                "MemoryStore.quantize_queries: float queries on a "
+                "never-calibrated store (e.g. fresh create() or "
+                "from_quantized()) would quantize against the default "
+                "(lo=0, hi=1) range and return garbage words; call "
+                "store.calibrate(sample) first, or pass pre-quantized "
+                "integer queries.")
         cfg = self.cfg.search
         levels = 4 if cfg.mode == "avss" else cfg.enc.levels
         return _quantize(queries, levels, self.lo, self.hi)
@@ -209,10 +326,16 @@ class MemoryStore:
         value 0 -- indistinguishable from never-written slots, so the mask
         penalty ranks them after every valid row and top-k results stay
         bit-identical to the unsharded search for k <= the unpadded row
-        count."""
+        count.
+
+        Idempotent: re-sharding always starts from the LOGICAL
+        `cfg.capacity` rows (any ragged pad rows from a previous shard are
+        dropped first), so pads never accumulate and
+        `shard(mesh_a).shard(mesh_b)` equals `shard(mesh_b)` exactly."""
         axes = tuple(axes)
         n_shards = int(np.prod([mesh.shape[a] for a in axes]))
-        store = self._pad_rows((-self.capacity) % n_shards)
+        base = self._unpad()
+        store = base._pad_rows((-base.capacity) % n_shards)
         row = NamedSharding(mesh, P(axes))
         rep = NamedSharding(mesh, P())
         return dataclasses.replace(
@@ -226,6 +349,16 @@ class MemoryStore:
             hi=jax.device_put(store.hi, rep),
             mesh=mesh, axes=axes,
         )
+
+    def _unpad(self) -> "MemoryStore":
+        """Drop ragged-shard pad rows: back to the logical cfg.capacity
+        rows (a no-op on a never-padded store)."""
+        n = self.cfg.capacity
+        if self.capacity == n:
+            return self
+        return dataclasses.replace(
+            self, values=self.values[:n], proj=self.proj[:n],
+            s_grid=self.s_grid[:n], labels=self.labels[:n])
 
     def _pad_rows(self, pad: int) -> "MemoryStore":
         if pad == 0:

@@ -1,6 +1,8 @@
 """Pallas TPU kernel: fused AVSS shortlist (LUT distance matmul + top-k).
 
-Phase 1 of the two-phase search normally materialises the full (B, N)
+Phase 1 of the two-phase search -- and, since the ideal-serving rework, the
+unsharded `ideal` mode of `RetrievalEngine.search` at large N (>=
+engine.IDEAL_FUSED_MIN_ROWS) -- normally materialises the full (B, N)
 distance matrix in HBM, then runs lax.top_k over it. This kernel fuses the
 two: the grid walks the support rows tile by tile, each step computes the
 (tile_b, tile_n) distance block on the MXU and folds it into a running

@@ -169,7 +169,12 @@ def _compile_step(cfg, shape, mesh, rules, tc, retrieval, unroll=False):
                 from jax.sharding import NamedSharding
                 from jax.sharding import PartitionSpec as P
                 mem_cfg = MemoryConfig(capacity=131072, dim=48)
-                mem_abs = jax.eval_shape(lambda: MemoryStore.create(mem_cfg))
+                # calibrate the abstract store: the serving store is always
+                # calibrated before decode, and quantize_queries refuses
+                # float queries on a never-calibrated store
+                mem_abs = jax.eval_shape(
+                    lambda: MemoryStore.create(mem_cfg).calibrate(
+                        jnp.zeros((4, mem_cfg.dim), jnp.float32)))
                 row = NamedSharding(mesh, P(tuple(mesh.axis_names)))
                 rep = NamedSharding(mesh, P())
                 mem_shard = jax.tree_util.tree_map(

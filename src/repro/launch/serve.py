@@ -46,9 +46,10 @@ def serve(arch: str, smoke: bool, batch: int, steps: int, prompt_len: int,
         # loop below jits against the store's constant layouts
         mstate = MemoryStore.create(mem_cfg).calibrate(vecs).write(vecs, toks)
         engine = (RetrievalEngine(mem_cfg.search, backend=retrieval_backend)
-                  if retrieval_mode == "two-phase" else None)
+                  if retrieval_mode in ("two-phase", "ideal") else None)
+        mode = "ideal" if retrieval_mode == "ideal" else "two_phase"
         step_fn = jax.jit(steps_lib.make_serve_step_with_mcam(
-            cfg, rules, mem_cfg, engine=engine, k=retrieval_k))
+            cfg, rules, mem_cfg, engine=engine, k=retrieval_k, mode=mode))
 
     key = jax.random.PRNGKey(1)
     tok = jax.random.randint(key, (batch, 1), 0, cfg.vocab_size)
@@ -82,9 +83,12 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--retrieval", action="store_true")
     ap.add_argument("--retrieval-mode", default="two-phase",
-                    choices=["dense", "two-phase"],
-                    help="dense: softmax over the whole store; two-phase: "
-                         "engine shortlist + exact noisy rescore")
+                    choices=["dense", "two-phase", "ideal"],
+                    help="dense: softmax over the whole store (legacy "
+                         "comparison path); two-phase: engine shortlist + "
+                         "exact noisy rescore; ideal: engine top-k by exact "
+                         "digital distance only (cheapest; streams through "
+                         "the fused shortlist kernel at large N)")
     ap.add_argument("--retrieval-backend", default="auto",
                     choices=["auto", "ref", "pallas", "mxu", "fused"])
     ap.add_argument("--retrieval-k", type=int, default=32)

@@ -319,7 +319,8 @@ def make_serve_step(cfg: ModelConfig, rules: Rules):
 
 
 def make_serve_step_with_mcam(cfg: ModelConfig, rules: Rules, mem_cfg,
-                              lam: float = 0.3, engine=None, k: int = 32):
+                              lam: float = 0.3, engine=None, k: int = 32,
+                              mode: str = "two_phase"):
     """Paper-integrated serving: the decoded hidden state queries the MCAM
     memory and the vote distribution over memory labels (token ids) mixes
     with the LM softmax -- a kNN-LM head served from the simulated NAND-CAM.
@@ -329,14 +330,20 @@ def make_serve_step_with_mcam(cfg: ModelConfig, rules: Rules, mem_cfg,
     loop, so no step re-runs `layout_support` or `support_projection`.
 
     engine=None (default): dense ideal-distance softmax over the whole
-    LUT-projected store (one bf16 matmul, rows sharded over the mesh).
-    engine=RetrievalEngine: two-phase retrieval through the unified
-    `engine.search(store, q, SearchRequest)` -- MXU shortlist of the top-k
-    supports + exact noisy vote rescore -- and the mixture weights come
-    from the NOISY MCAM VOTES, so the served distribution reflects the
-    simulated hardware's similarity judgement, not the ideal distance."""
+    LUT-projected store (one bf16 matmul, rows sharded over the mesh) --
+    the legacy comparison path; it materialises the (B, N) distance matrix.
+    engine=RetrievalEngine: retrieval through the unified
+    `engine.search(store, q, SearchRequest)` with `mode`:
+      'two_phase'  MXU shortlist + exact noisy vote rescore; the mixture
+                   weights come from the NOISY MCAM VOTES, so the served
+                   distribution reflects the simulated hardware's
+                   similarity judgement, not the ideal distance.
+      'ideal'      top-k by exact digital distance only (votes == -dist on
+                   valid candidates) -- the cheapest serving path; at
+                   N >= engine.IDEAL_FUSED_MIN_ROWS it streams through the
+                   fused shortlist kernel instead of the dense matmul."""
     from repro.engine import SearchRequest
-    request = SearchRequest(mode="two_phase", k=k)
+    request = SearchRequest(mode=mode, k=k)
 
     def serve_step(params, caches, batch, pos, store):
         logits, caches, hidden = tfm.decode_step(

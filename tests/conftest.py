@@ -23,6 +23,28 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running test (system pipelines, subprocess "
         "multi-device runs); deselect with -m 'not slow'")
+    # Internal deprecation shims (repro.core.memory.search /
+    # distributed_search) are promoted to ERRORS suite-wide, so migrated
+    # callers cannot silently regress onto the legacy API. Modules that
+    # deliberately exercise the shims (tests/test_memory.py, the legacy-API
+    # suite) scope this back with a filterwarnings mark.
+    config.addinivalue_line(
+        "filterwarnings",
+        "error:repro\\.core\\.memory:DeprecationWarning")
+
+
+@pytest.fixture(autouse=True)
+def _isolate_legacy_shim_warnings():
+    """The shims warn once per PROCESS (core/memory._WARNED): without
+    isolation, the first legitimate legacy-API test would latch the warning
+    for the rest of the run and the error promotion above would never fire
+    for a later regressed caller. Restoring the latch around every test
+    keeps the promotion live suite-wide."""
+    from repro.core import memory as mem
+    saved = set(mem._WARNED)
+    yield
+    mem._WARNED.clear()
+    mem._WARNED.update(saved)
 
 
 @pytest.fixture(scope="session")

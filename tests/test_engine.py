@@ -147,6 +147,73 @@ def test_shortlist_valid_mask_excludes_rows():
 
 
 # ---------------------------------------------------------------------------
+# Ideal mode: fused shortlist kernel == dense (B, N) matmul, bit for bit.
+# ---------------------------------------------------------------------------
+
+
+def test_ideal_fused_matches_dense_tie_heavy():
+    """The large-N ideal serving path (fused shortlist kernel) is
+    bit-identical to the dense-matmul reference -- votes, dist, indices
+    AND labels -- on a tie-heavy store with masked rows inside the top-k
+    (masked rows carry the integer-exact penalty in both paths)."""
+    from repro.engine import MemoryStore, SearchRequest
+    cfg = SearchConfig("mtmc", cl=8, mode="avss", use_kernel="ref")
+    base = jax.random.randint(jax.random.PRNGKey(0), (8, 20), 0,
+                              cfg.enc.levels)
+    sv = jnp.concatenate([base] * 9, axis=0)            # 72 rows, 9x dups
+    labels = jnp.where(jnp.arange(72) % 4 == 0, -1,
+                       jnp.arange(72)).astype(jnp.int32)  # 18 masked rows
+    store = MemoryStore.from_quantized(sv, labels, cfg)
+    qv = jax.random.randint(jax.random.PRNGKey(1), (5, 20), 0, 4)
+    req = SearchRequest(mode="ideal", k=70)             # reaches masked rows
+    dense = RetrievalEngine(cfg, backend="ref").search(store, qv, req)
+    fused = RetrievalEngine(cfg, backend="fused").search(store, qv, req)
+    for key in ("votes", "dist", "indices", "labels"):
+        np.testing.assert_array_equal(np.asarray(getattr(dense, key)),
+                                      np.asarray(getattr(fused, key)),
+                                      err_msg=key)
+    # masked candidates surface as -inf votes / -1 labels in both
+    assert np.isneginf(np.asarray(dense.votes)).any()
+
+
+def test_ideal_routes_through_fused_kernel_at_large_n(monkeypatch):
+    """Acceptance (ISSUE 3): at N >= IDEAL_FUSED_MIN_ROWS the unsharded
+    ideal mode streams through kernels/shortlist.py instead of
+    materialising the dense (B, N) matrix; small stores and the ref
+    backend keep the dense reference."""
+    from repro.engine import MemoryStore, SearchRequest
+    from repro.engine.engine import IDEAL_FUSED_MIN_ROWS
+    from repro.kernels import ops as kernel_ops
+    cfg = SearchConfig("mtmc", cl=8, mode="avss", use_kernel="auto")
+    N = IDEAL_FUSED_MIN_ROWS
+    sv = jnp.tile(jax.random.randint(jax.random.PRNGKey(0), (128, 16), 0,
+                                     cfg.enc.levels), (N // 128, 1))
+    store = MemoryStore.from_quantized(
+        sv, jnp.arange(N, dtype=jnp.int32) % 17, cfg)
+    small = MemoryStore.from_quantized(
+        sv[:64], jnp.arange(64, dtype=jnp.int32), cfg)
+    qv = jax.random.randint(jax.random.PRNGKey(1), (3, 16), 0, 4)
+    req = SearchRequest(mode="ideal", k=16)
+
+    calls = []
+    orig = kernel_ops.lut_shortlist
+    monkeypatch.setattr(kernel_ops, "lut_shortlist",
+                        lambda *a, **kw: (calls.append(1), orig(*a, **kw))[1])
+    eng = RetrievalEngine(cfg)                  # auto -> pallas (kernels)
+    assert eng.resolved_backend != "ref"
+    fused_res = eng.search(store, qv, req)
+    assert len(calls) == 1, "large-N ideal must use the fused shortlist"
+    eng.search(small, qv, req)
+    assert len(calls) == 1, "small-N ideal keeps the dense matmul"
+    ref_res = RetrievalEngine(cfg, backend="ref").search(store, qv, req)
+    assert len(calls) == 1, "ref backend keeps the dense reference"
+    for key in ("votes", "dist", "indices", "labels"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref_res, key)),
+                                      np.asarray(getattr(fused_res, key)),
+                                      err_msg=key)
+
+
+# ---------------------------------------------------------------------------
 # (c) Two-phase recall@k == 1.0 vs full search on small clustered stores.
 # ---------------------------------------------------------------------------
 

@@ -9,6 +9,11 @@ from repro.core import memory as mem
 from repro.core.avss import SearchConfig
 from repro.core.memory import MemoryConfig
 
+# Legacy-API suite: the deprecation shims legitimately fire here, so the
+# suite-wide promotion to errors (tests/conftest.py) is scoped back.
+pytestmark = pytest.mark.filterwarnings(
+    "default:repro\\.core\\.memory:DeprecationWarning")
+
 
 def _toy_memory(n_classes=6, per_class=8, dim=24, key=0):
     cfg = MemoryConfig(capacity=128, dim=dim,

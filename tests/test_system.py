@@ -97,6 +97,8 @@ def test_avss_close_to_svss():
 
 
 @pytest.mark.slow
+@pytest.mark.filterwarnings(
+    "default:repro\\.core\\.memory:DeprecationWarning")  # legacy-API path
 def test_full_mann_pipeline_with_controller(fsl_episode, conv4_embeddings):
     """Conv4 controller (untrained) + memory + AVSS beats chance by a wide
     margin on the procedural Omniglot-like episodes.
