@@ -12,9 +12,10 @@ Suites:
   engine   retrieval engine: full vs two-phase vs sharded vs store-based
            unified search, plus the streaming-write and large-N ideal
            serving rows (bench_engine)
-  engine_sharded  multi-device sharded scaling (search AND shard-local
-           streaming writes) on a forced 8-device host mesh (subprocess,
-           like tests/test_distributed.py); writes
+  engine_sharded  multi-device sharded scaling (search, shard-local
+           streaming writes, AND the per-shard shortlist dense-vs-fused
+           sweep) on a forced 8-device host mesh (subprocess, like
+           tests/test_distributed.py); writes
            results/bench_engine_sharded.json (CI artifact)
   roofline dry-run derived roofline terms (benchmarks.roofline; needs the
            dryrun sweep artifacts under results/dryrun)

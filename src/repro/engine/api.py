@@ -7,11 +7,13 @@ Every search in the framework goes through one entry point,
 replacing the five overlapping ad-hoc paths of the pre-redesign API
 (`engine.full` / `engine.two_phase` / `engine.sharded_two_phase`,
 `memory.search` / `memory.distributed_search`) and their untyped result
-dicts. The request names WHAT to search (mode, k, backend, shard axes);
-the store (repro/engine/store.py) carries the programmed memory and its
-sharding; the result is a registered pytree safe to return from jit.
+dicts. The request names WHAT to search (mode, k, backend, shard axes,
+fused-shortlist threshold); the store (repro/engine/store.py) carries the
+programmed memory and its sharding; the result is a registered pytree safe
+to return from jit.
 
-Old -> new mapping (the old entry points remain as thin shims):
+Old -> new mapping (the old entry points remain as thin shims; the full
+table with the deprecation policy lives in docs/migration.md):
 
   engine.full(q, s)                      search(store, q, mode="full")
   engine.two_phase(q, s, k)              search(store, q, mode="two_phase", k)
@@ -37,7 +39,7 @@ class SearchRequest:
     """What to search. Hashable -> usable as a jit-static argument.
 
     mode:    'full'       exact noisy MCAM search of every store row;
-             'two_phase'  MXU shortlist by ideal digital distance + exact
+             'two_phase'  shortlist by ideal digital distance + exact
                           noisy rescore of the top-k candidates (the
                           production serving path);
              'ideal'      ideal-digital-distance top-k only, no rescore
@@ -47,12 +49,31 @@ class SearchRequest:
              ('ref' | 'pallas' | 'mxu' | 'fused') overrides it per request.
     axes:    shard axes override; None defers to the store's own sharding
              (`MemoryStore.shard` records mesh + axes on the store).
+    fused_min_rows: per-request override of the engine's fused-shortlist
+             row threshold (None defers to the engine). Shortlists -- the
+             'ideal' mode and phase 1 of 'two_phase', per SHARD-LOCAL block
+             on a sharded store -- stream through the fused Pallas kernel
+             (repro/kernels/shortlist.py) once the row count reaches this
+             threshold; results are bit-identical either way, so this is
+             purely a performance knob (e.g. for applying a measured TPU
+             dense-vs-fused crossover without a code change).
+
+    >>> SearchRequest(mode="ideal", k=8).mode
+    'ideal'
+    >>> SearchRequest().k                  # default: two-phase, k=64
+    64
+    >>> SearchRequest(mode="nearest")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown search mode 'nearest'; expected one of \
+('full', 'two_phase', 'ideal')
     """
 
     mode: str = "two_phase"
     k: int = 64
     backend: str = "auto"
     axes: tuple | None = None
+    fused_min_rows: int | None = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -70,18 +91,28 @@ class SearchResult:
     votes:      (B, K) MCAM vote scores (-inf on masked/empty candidates);
                 for mode='full', K == store rows; for 'ideal', votes==-dist
                 on valid candidates (and -inf on masked ones).
-    dist:       (B, K) ideal digital AVSS distance (masked rows additionally
-                carry the integer-exact SHORTLIST_MASK_PENALTY -- in every
-                mode, 'ideal' included).
+    dist:       (B, K) ideal digital AVSS distance. Masked rows (slots never
+                written, or ragged-shard pad rows) additionally carry the
+                integer-exact SHORTLIST_MASK_PENALTY (2**22, added in
+                phase 1 -- in every mode, 'ideal' included), which is why
+                they sort after every valid candidate while backend and
+                sharding bit-parity survives masking.
     indices:    (B, K) global store rows of each candidate.
     labels:     (B, K) candidate labels (-1 on masked/empty candidates).
     iterations: word-line cycles per query (python int; static metadata).
 
-    Sentinel: searching a store with NO valid candidates (empty, or entirely
-    ragged-pad rows) yields `predict() == -1` for every query -- every
-    candidate label is the never-written marker -1, so no arbitrary class
-    can win (asserted for every mode/backend/sharding in
-    tests/test_store.py).
+    A tie-heavy toy result -- votes tie at 3.0, so the smaller ideal
+    distance wins, and `best()` / `predict()` pick label 9:
+
+    >>> import jax.numpy as jnp
+    >>> r = SearchResult(votes=jnp.array([[1.0, 3.0, 3.0]]),
+    ...                  dist=jnp.array([[0.0, 2.0, 1.0]]),
+    ...                  indices=jnp.array([[0, 1, 2]]),
+    ...                  labels=jnp.array([[5, 7, 9]]))
+    >>> int(r.best()[0])
+    2
+    >>> int(r.predict()[0])
+    9
     """
 
     votes: jax.Array
@@ -99,8 +130,24 @@ class SearchResult:
                           axis=-1)
 
     def predict(self) -> jax.Array:
-        """(B,) 1-NN label prediction (label of `best()` per query);
-        -1 when the store held no valid candidate (see class docstring)."""
+        """(B,) 1-NN label prediction: the label of `best()` per query.
+
+        The -1 sentinel: a label of -1 marks a candidate from a slot that
+        was never written (empty store slots, ragged-shard pad rows). Such
+        candidates carry -inf votes and the SHORTLIST_MASK_PENALTY on
+        their distance, so they can only win when the store holds NO valid
+        candidate at all -- in that case every query predicts -1, never an
+        arbitrary class label (asserted for every mode/backend/sharding in
+        tests/test_store.py). Callers should treat -1 as "no prediction".
+
+        >>> import jax.numpy as jnp
+        >>> empty = SearchResult(votes=jnp.full((1, 2), -jnp.inf),
+        ...                      dist=jnp.full((1, 2), 2.0 ** 22),
+        ...                      indices=jnp.array([[0, 1]]),
+        ...                      labels=jnp.array([[-1, -1]]))
+        >>> int(empty.predict()[0])        # no valid candidate -> sentinel
+        -1
+        """
         return jnp.take_along_axis(self.labels, self.best()[:, None], 1)[:, 0]
 
     def asdict(self) -> dict:

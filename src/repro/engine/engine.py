@@ -37,11 +37,15 @@ from repro.engine.api import SearchRequest, SearchResult
 from repro.engine.backends import resolve_backend
 from repro.kernels import ref as ref_kernels
 
-# Unsharded `ideal` searches of stores at least this many rows route through
-# the fused Pallas shortlist kernel (kernels/shortlist.py) instead of
-# materialising the dense (B, N) distance matrix -- HBM traffic drops from
-# O(B*N) to O(B*k + N*4d), bit-identically (the fused kernel reproduces
-# lax.top_k's (distance, row) order exactly, ties included).
+# Default row threshold above which shortlists (the `ideal` mode and the
+# two-phase phase 1 -- unsharded, or PER SHARD-LOCAL BLOCK when sharded)
+# route through the fused Pallas shortlist kernel (kernels/shortlist.py)
+# instead of materialising the dense (B, N) distance matrix -- HBM traffic
+# drops from O(B*N) to O(B*k + N*4d), bit-identically (the fused kernel
+# reproduces lax.top_k's (distance, row) order exactly, ties included).
+# This default is a CPU-interpret guess; override it without code change
+# via RetrievalEngine(fused_min_rows=...) or SearchRequest.fused_min_rows
+# once the dense-vs-fused crossover is measured on real TPU HBM.
 IDEAL_FUSED_MIN_ROWS = 4096
 
 
@@ -53,10 +57,15 @@ class RetrievalEngine:
               noise). `cfg.use_kernel` is honoured as a fallback preference.
     backend:  'auto' | 'ref' | 'pallas' | 'mxu' | 'fused'; overrides
               cfg.use_kernel when not 'auto'.
+    fused_min_rows: row threshold for the fused-shortlist dispatch (per
+              shard-local block on sharded stores); 'fused' always fuses
+              and 'ref' never does. `SearchRequest.fused_min_rows`
+              overrides this per request.
     """
 
     cfg: SearchConfig
     backend: str = "auto"
+    fused_min_rows: int = IDEAL_FUSED_MIN_ROWS
 
     @property
     def resolved_backend(self) -> str:
@@ -79,6 +88,13 @@ class RetrievalEngine:
             cache[backend] = eng
         return eng
 
+    def _fused_threshold(self, request: SearchRequest | None = None) -> int:
+        """Effective fused-shortlist row threshold: the request override
+        when set, else this engine's `fused_min_rows`."""
+        if request is not None and request.fused_min_rows is not None:
+            return request.fused_min_rows
+        return self.fused_min_rows
+
     # -- unified entry point -----------------------------------------------
 
     def search(self, store, queries: jax.Array,
@@ -91,10 +107,25 @@ class RetrievalEngine:
                   (mesh, axes) metadata selects the sharded dispatch.
         queries:  (B, dim) float embeddings (quantized with the store's
                   calibrated range) or pre-quantized ints (passed through).
-        request:  SearchRequest (mode, k, backend, axes); default two-phase.
+        request:  SearchRequest (mode, k, backend, axes, fused threshold);
+                  default two-phase.
 
         Results are bit-identical to the raw-array methods below for every
-        mode/backend/sharding (tests/test_engine.py, tests/test_store.py).
+        mode/backend/sharding (tests/test_engine.py, tests/test_store.py)
+        -- including whether a shortlist ran the fused Pallas kernel or
+        the dense reference (`fused_min_rows` is purely a perf knob).
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core.avss import SearchConfig
+        >>> from repro.engine import (MemoryStore, RetrievalEngine,
+        ...                           SearchRequest)
+        >>> cfg = SearchConfig("mtmc", cl=4, mode="avss", use_kernel="ref")
+        >>> sv = jnp.array([[0, 3], [5, 5], [9, 7]])   # quantized supports
+        >>> store = MemoryStore.from_quantized(sv, jnp.array([7, 8, 9]), cfg)
+        >>> res = RetrievalEngine(cfg).search(          # query words in [0,4)
+        ...     store, jnp.array([[1, 1]]), SearchRequest(mode="ideal", k=1))
+        >>> res.predict().tolist()          # nearest support is row 1
+        [8]
         """
         req = request if request is not None else SearchRequest()
         eng = self.with_backend(req.backend)
@@ -103,13 +134,19 @@ class RetrievalEngine:
         iters = eng._iterations(q.shape[-1])
 
         if store.mesh is not None and req.mode != "full":
+            # per-shard shortlists share the unsharded dispatch rule: the
+            # fused Pallas kernel engages once a shard's LOCAL rows reach
+            # the threshold (engine/sharded._use_fused)
             axes = req.axes if req.axes is not None else store.axes
+            fmr = eng._fused_threshold(req)
+            backend = eng.resolved_backend
             if req.mode == "two_phase":
                 from repro.engine import sharded
                 res = sharded.sharded_two_phase_search(
                     q, store.values, eng.cfg, store.mesh, axes=axes,
                     k=req.k, valid=valid, labels=store.labels,
-                    s_grid=store.s_grid)
+                    s_grid=store.s_grid, proj=store.proj,
+                    backend=backend, fused_min_rows=fmr)
                 # labels come from the per-shard fold (-1 on empty/pad
                 # rows): mask their votes without any global gather
                 votes = jnp.where(res["labels"] >= 0, res["votes"],
@@ -121,7 +158,7 @@ class RetrievalEngine:
             q1h = kernel_ops.query_onehot(q, jnp.float32)
             res = sharded.sharded_ideal_search(
                 q1h, store.proj, store.labels, store.mesh, axes=axes,
-                k=req.k)
+                k=req.k, backend=backend, fused_min_rows=fmr)
             votes = jnp.where(res["labels"] >= 0, res["votes"], -jnp.inf)
             return SearchResult(votes, res["dist"], res["indices"],
                                 res["labels"], iters)
@@ -136,7 +173,8 @@ class RetrievalEngine:
                                 res["iterations"])
         if req.mode == "two_phase":
             res = eng.two_phase(q, store.values, k=req.k, valid=valid,
-                                s_grid=store.s_grid, proj=store.proj)
+                                s_grid=store.s_grid, proj=store.proj,
+                                fused_min_rows=eng._fused_threshold(req))
             labels = store.labels[res["indices"]]      # -1 on empty slots
             votes = jnp.where(labels >= 0, res["votes"], -jnp.inf)
             return SearchResult(votes, res["dist"], res["indices"], labels,
@@ -151,18 +189,17 @@ class RetrievalEngine:
         from repro.kernels import ops as kernel_ops
         k = min(req.k, store.capacity)
         backend = eng.resolved_backend
-        if backend != "ref" and (store.capacity >= IDEAL_FUSED_MIN_ROWS
+        if backend != "ref" and (store.capacity >= eng._fused_threshold(req)
                                  or backend == "fused"):
             dist, idx = kernel_ops.lut_shortlist(
                 q, store.values, eng.cfg.enc, k, valid=valid,
                 proj=store.proj)
         else:
+            # same dense block shortlist the sharded paths use per shard
+            from repro.engine.sharded import _local_shortlist
             q1h = kernel_ops.query_onehot(q, jnp.float32)
-            d = q1h @ store.proj.astype(jnp.float32).T
-            d = d + jnp.where(valid, 0.0,
-                              kernel_ops.SHORTLIST_MASK_PENALTY)[None]
-            neg, idx = jax.lax.top_k(-d, k)
-            dist = -neg
+            dist, idx = _local_shortlist(q1h, store.proj, valid, k,
+                                         fused=False)
         labels = store.labels[idx]
         votes = jnp.where(labels >= 0, -dist, -jnp.inf)
         return SearchResult(votes, dist, idx, labels, iters)
@@ -218,7 +255,8 @@ class RetrievalEngine:
 
     def shortlist(self, q_values: jax.Array, s_values: jax.Array, k: int,
                   valid: jax.Array | None = None,
-                  proj: jax.Array | None = None
+                  proj: jax.Array | None = None,
+                  fused_min_rows: int | None = None
                   ) -> tuple[jax.Array, jax.Array]:
         """Top-k supports by ideal digital AVSS distance.
 
@@ -236,13 +274,21 @@ class RetrievalEngine:
         projection is a deterministic function of the values), just hoisted
         out of the search. The ref backend always recomputes -- it is the
         readable reference, and its distances are bit-identical anyway.
+
+        Dispatch mirrors every other shortlist site: the fused Pallas
+        kernel engages on the 'fused' backend, and on any kernel backend
+        once N reaches the fused threshold (`fused_min_rows`, overridable
+        per call); 'ref' and small N keep the dense matmul + lax.top_k.
         """
         from repro.kernels import ops as kernel_ops
         cfg = self.cfg
         assert cfg.mode == "avss", "shortlists use the AVSS LUT"
         k = min(k, s_values.shape[0])
         backend = self.resolved_backend
-        if backend == "fused":
+        if fused_min_rows is None:
+            fused_min_rows = self.fused_min_rows
+        if backend == "fused" or (backend != "ref"
+                                  and s_values.shape[0] >= fused_min_rows):
             return kernel_ops.lut_shortlist(q_values, s_values, cfg.enc, k,
                                             valid=valid, proj=proj)
         if backend == "ref":
@@ -262,11 +308,15 @@ class RetrievalEngine:
     def two_phase(self, q_values: jax.Array, s_values: jax.Array,
                   k: int = 64, valid: jax.Array | None = None, *,
                   s_grid: jax.Array | None = None,
-                  proj: jax.Array | None = None) -> dict[str, jax.Array]:
+                  proj: jax.Array | None = None,
+                  fused_min_rows: int | None = None
+                  ) -> dict[str, jax.Array]:
         """Shortlist + exact noisy rescore (beyond-paper TPU pipeline).
 
         s_grid / proj: optional write-time layouts (MemoryStore fields);
         omitted -> recomputed here, read-time, with identical results.
+        fused_min_rows: phase-1 fused-kernel threshold override (see
+        `shortlist`); None defers to the engine's field.
         Returns {votes (B, k), dist (B, k) ideal shortlist distances
         (masked rows carry the mask penalty), indices (B, k) global support
         rows, iterations}. Votes are bit-identical to `full` for every
@@ -275,7 +325,7 @@ class RetrievalEngine:
         from repro.kernels import ops as kernel_ops
         cfg = self.cfg
         dist, idx = self.shortlist(q_values, s_values, k, valid=valid,
-                                   proj=proj)
+                                   proj=proj, fused_min_rows=fused_min_rows)
         q_grid, s_grid, weights, thresholds = self._grids(q_values, s_values,
                                                           s_grid)
         votes = kernel_ops.rescore_shortlist(
@@ -292,11 +342,15 @@ class RetrievalEngine:
         """Two-phase search with the store row-sharded over mesh `axes`.
 
         Bit-identical to `two_phase` on a single device: each shard
-        shortlists its rows, rescores its local candidates with GLOBAL
-        support indices feeding the noise counters, and the candidate sets
-        are all-gathered and merged by (distance, global index). See
-        repro/engine/sharded.py for the exactness argument.
+        shortlists its rows (fused Pallas kernel above the engine's
+        `fused_min_rows` threshold, dense matmul below), rescores its local
+        candidates with GLOBAL support indices feeding the noise counters,
+        and the candidate sets are all-gathered and merged by (distance,
+        global index). See repro/engine/sharded.py for the exactness
+        argument.
         """
         from repro.engine import sharded
         return sharded.sharded_two_phase_search(
-            q_values, s_values, self.cfg, mesh, axes=axes, k=k, valid=valid)
+            q_values, s_values, self.cfg, mesh, axes=axes, k=k, valid=valid,
+            backend=self.resolved_backend,
+            fused_min_rows=self.fused_min_rows)

@@ -2,7 +2,7 @@
 
 Two flavours:
 
-  sharded_two_phase_search   per-shard MXU shortlist + exact noisy rescore,
+  sharded_two_phase_search   per-shard shortlist + exact noisy rescore,
                              then all-gather + global top-k merge (candidate
                              labels folded into the gather from per-shard
                              lookups). Votes are BIT-IDENTICAL to the
@@ -12,13 +12,25 @@ Two flavours:
   sharded_ideal_search       ideal-digital-distance only (the cheap serving
                              path formerly inlined in core/memory.py).
 
+Both paths share ONE per-shard shortlist implementation with the unsharded
+engine: when a shard's local rows reach `fused_min_rows` (or the backend is
+'fused'), phase 1 runs the fused Pallas shortlist kernel
+(kernels/shortlist.py, HBM O(B*k_loc + N_loc*4d)) inside the shard_map
+body -- masked rows (ragged pads, empty slots) are penalised NATIVELY in
+the kernel with the integer-exact SHORTLIST_MASK_PENALTY, and ragged
+(non-tile-aligned) local blocks are padded inside the kernel wrapper.
+Below the threshold (and on the 'ref' backend) the readable dense local
+matmul + lax.top_k remains, bit-identically.
+
 Exactness argument for the two-phase path (verified by
 tests/test_engine.py::test_sharded_two_phase_bit_identical):
 
 * Shortlist distances are integer-valued f32 (AVSS LUT entries are small
   integers, one-hot queries are 0/1, f32 accumulation is exact below 2**24),
-  so every shard computes the same exact distance a single device would.
-* `jax.lax.top_k` ranks by (value, index): a support in the GLOBAL top-k is
+  so every shard computes the same exact distance a single device would --
+  fused or dense.
+* `jax.lax.top_k` ranks by (value, index), and the fused kernel reproduces
+  that order exactly (ties included): a support in the GLOBAL top-k is
   necessarily in its shard's LOCAL top-k under the same order, so no global
   candidate is lost by local pruning.
 * The all-gather stacks shards in mesh-axis-major order -- the same order a
@@ -35,9 +47,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
-
-from repro.core import avss as avss_lib
-from repro.core.avss import SearchConfig
 
 
 def _shard_index(mesh, axes) -> jax.Array:
@@ -56,11 +65,45 @@ def _gather_candidates(x: jax.Array, axes) -> jax.Array:
     return jnp.moveaxis(stacked, 0, 1).reshape(x.shape[0], -1)
 
 
+def _use_fused(backend: str, rows_loc: int, fused_min_rows) -> bool:
+    """Shared shard-local dispatch rule: the fused Pallas shortlist kernel
+    engages on any kernel backend once a shard's local rows reach the
+    threshold, and always on the 'fused' backend; the 'ref' backend (and
+    fused_min_rows=None, the raw-array default) keeps the dense local
+    matmul as the readable reference."""
+    if backend == "fused":
+        return True
+    return (backend != "ref" and fused_min_rows is not None
+            and rows_loc >= fused_min_rows)
+
+
+def _local_shortlist(q1h, proj_loc, valid_loc, k_loc, *, fused: bool
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Block shortlist shared by every dispatch site (per shard inside the
+    shard_map bodies here, and the unsharded dense `ideal` route in
+    engine.py): top-k_loc of the rows by exact integer LUT distance
+    (+ native mask penalty), fused or dense -- bit-identical either way
+    (the kernel reproduces lax.top_k's (distance, row) order)."""
+    if fused:
+        from repro.kernels import shortlist as shortlist_kernel
+        return shortlist_kernel.lut_shortlist_pallas(
+            q1h, proj_loc, k_loc, valid=valid_loc)
+    from repro.kernels import ops as kernel_ops
+    dist = q1h @ proj_loc.astype(jnp.float32).T            # (B, N_loc)
+    dist = dist + jnp.where(valid_loc, 0.0,
+                            kernel_ops.SHORTLIST_MASK_PENALTY)[None]
+    neg, idx = jax.lax.top_k(-dist, k_loc)
+    return -neg, idx
+
+
 def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
-                             cfg: SearchConfig, mesh, axes=("data",),
+                             cfg, mesh, axes=("data",),
                              k: int = 64, valid: jax.Array | None = None,
                              labels: jax.Array | None = None,
-                             s_grid: jax.Array | None = None
+                             s_grid: jax.Array | None = None,
+                             proj: jax.Array | None = None,
+                             backend: str = "ref",
+                             fused_min_rows: int | None = None
                              ) -> dict[str, jax.Array]:
     """Two-phase AVSS over a store row-sharded on `axes`.
 
@@ -75,11 +118,17 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
     the result gains a "labels" key.
     s_grid: optional (N, seg, L, sl) write-time string grid (row-sharded,
     MemoryStore.s_grid); omitted -> each shard lays out its rows here.
+    proj: optional (N, 4d) write-time LUT projection (row-sharded,
+    MemoryStore.proj); omitted -> each shard projects its rows here.
+    backend / fused_min_rows: per-shard shortlist dispatch (see
+    `_use_fused`); the default (ref, None) keeps the dense local matmul.
     Returns {votes (B, k), dist (B, k), indices (B, k) global rows
     [, labels (B, k)], iterations} -- bit-identical to
-    RetrievalEngine.two_phase(q, s, k, valid) on a single device.
+    RetrievalEngine.two_phase(q, s, k, valid) on a single device,
+    whichever shortlist path engages.
     """
     from jax.experimental.shard_map import shard_map
+    from repro.core import avss as avss_lib
     from repro.kernels import ops as kernel_ops
 
     assert cfg.mode == "avss", "two-phase search shortlists with the AVSS LUT"
@@ -92,6 +141,7 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
         f"(MemoryStore.shard pads ragged splits)")
     k = min(k, N)
     k_loc = min(k, N // n_shards)
+    fused = _use_fused(backend, N // n_shards, fused_min_rows)
 
     q1h = kernel_ops.query_onehot(q_values, jnp.float32)       # (B, 4d)
     q_grid = avss_lib.layout_query(q_values, enc, "avss", sl)
@@ -112,19 +162,24 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
     if s_grid is not None:
         extras.append(s_grid)
         extra_specs.append(P(axes))
+    if proj is not None:
+        extras.append(proj)
+        extra_specs.append(P(axes))
 
     def local(q1h_, q_grid_, s_loc, valid_loc, *rest):
         rest = list(rest)
         labels_loc = rest.pop(0) if labels is not None else None
         s_grid_loc = rest.pop(0) if s_grid is not None else None
+        proj_loc = rest.pop(0) if proj is not None else None
         offset = _shard_index(mesh, axes) * jnp.int32(s_loc.shape[0])
-        # phase 1 on local rows: exact integer-valued distances on the MXU
-        # (same LUT projection as kernels/ops.support_projection)
-        proj = lut.T[s_loc].reshape(s_loc.shape[0], -1)        # (N_loc, 4d)
-        dist = q1h_ @ proj.T                                   # (B, N_loc)
-        dist = dist + jnp.where(valid_loc, 0.0,
-                                kernel_ops.SHORTLIST_MASK_PENALTY)[None]
-        neg, idx_loc = jax.lax.top_k(-dist, k_loc)
+        # phase 1 on local rows: exact integer-valued distances, fused
+        # kernel or dense MXU matmul (same LUT projection as
+        # kernels/ops.support_projection, materialised at write time when
+        # the store provides `proj`)
+        if proj_loc is None:
+            proj_loc = lut.T[s_loc].reshape(s_loc.shape[0], -1)  # (N_loc, 4d)
+        d_loc, idx_loc = _local_shortlist(q1h_, proj_loc, valid_loc, k_loc,
+                                          fused=fused)
         gidx = idx_loc + offset
         # phase 2 on local candidates, GLOBAL indices for the noise counters
         if s_grid_loc is None:                         # read-time layout
@@ -135,7 +190,7 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
         # merge: stable sort by distance == (distance, global row) order.
         # Each shard contributes its candidates' LOCAL label lookups to the
         # gather, so the merge output needs no post-hoc global label gather.
-        d_all = _gather_candidates(-neg, axes)
+        d_all = _gather_candidates(d_loc, axes)
         v_all = _gather_candidates(votes, axes)
         i_all = _gather_candidates(gidx, axes)
         order = jnp.argsort(d_all, axis=-1, stable=True)[:, :k]
@@ -162,7 +217,9 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
 
 def sharded_ideal_search(q_onehot: jax.Array, proj: jax.Array,
                          labels: jax.Array, mesh, axes=("data",),
-                         k: int = 16) -> dict[str, jax.Array]:
+                         k: int = 16, backend: str = "ref",
+                         fused_min_rows: int | None = None
+                         ) -> dict[str, jax.Array]:
     """Ideal-digital-distance block search (no rescore; cheap serving path).
 
     q_onehot: (B, 4d) replicated query one-hots; proj: (N, 4d) row-sharded
@@ -171,22 +228,23 @@ def sharded_ideal_search(q_onehot: jax.Array, proj: jax.Array,
     same masking the two-phase and unsharded ideal paths use, so results
     stay bit-identical to the single-device fused/dense ideal search even
     when masked rows reach the top-k).
+    backend / fused_min_rows: per-shard shortlist dispatch (see
+    `_use_fused`); above the threshold each shard streams through the fused
+    Pallas shortlist kernel instead of the dense (B, N_loc) local matmul.
     Collective volume is O(B * k * shards), independent of capacity.
     Returns {dist, votes=-dist, labels, indices} each (B, k').
     """
     from jax.experimental.shard_map import shard_map
 
-    from repro.kernels import ops as kernel_ops
+    rows_loc = proj.shape[0] // int(np.prod([mesh.shape[a] for a in axes]))
+    fused = _use_fused(backend, rows_loc, fused_min_rows)
 
     def local(qr, proj_loc, labels_loc):
         offset = _shard_index(mesh, axes) * jnp.int32(proj_loc.shape[0])
-        dist = qr @ proj_loc.astype(jnp.float32).T             # (B, N_loc)
-        dist = dist + jnp.where(labels_loc < 0,
-                                kernel_ops.SHORTLIST_MASK_PENALTY,
-                                0.0)[None, :]
         kk = min(k, proj_loc.shape[0])
-        neg, idx = jax.lax.top_k(-dist, kk)
-        d_all = _gather_candidates(-neg, axes)
+        d_loc, idx = _local_shortlist(qr, proj_loc, labels_loc >= 0, kk,
+                                      fused=fused)
+        d_all = _gather_candidates(d_loc, axes)
         l_all = _gather_candidates(labels_loc[idx], axes)
         i_all = _gather_candidates(idx + offset, axes)
         order = jnp.argsort(d_all, axis=-1, stable=True)[:, :k]

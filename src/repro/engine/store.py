@@ -72,6 +72,27 @@ class MemoryStore:
     never-calibrated store (it always quantizes; already-quantized supports
     go through `from_quantized`), and `quantize_queries` refuses float
     queries (integer queries are already words and pass through).
+
+    Lifecycle: create -> calibrate -> write (-> shard), searched through
+    `RetrievalEngine.search`:
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.avss import SearchConfig
+    >>> from repro.core.memory import MemoryConfig
+    >>> from repro.engine import (MemoryStore, RetrievalEngine,
+    ...                           SearchRequest)
+    >>> cfg = MemoryConfig(capacity=8, dim=4,
+    ...                    search=SearchConfig("mtmc", cl=4, mode="avss",
+    ...                                        use_kernel="ref"))
+    >>> vecs = jnp.linspace(-1.0, 1.0, 12).reshape(3, 4)
+    >>> store = MemoryStore.create(cfg).calibrate(vecs)
+    >>> store = store.write(vecs, jnp.array([3, 1, 4]))
+    >>> int(store.size), store.capacity, int(store.valid.sum())
+    (3, 8, 3)
+    >>> res = RetrievalEngine(cfg.search).search(
+    ...     store, vecs, SearchRequest(mode="two_phase", k=2))
+    >>> res.predict().tolist()             # each vector retrieves itself
+    [3, 1, 4]
     """
 
     values: jax.Array

@@ -196,12 +196,10 @@ def two_phase_search(q_values: jax.Array, s_values: jax.Array, cfg,
             "iterations": res.iterations}
 
 
-# Added to the phase-1 distance of masked-out support rows. A power of two,
-# so it is exact in bf16/f32; > any real LUT distance (3 * d * sum(weights)
-# stays far below 2**22 for every paper geometry) and small enough that
-# dist + penalty remains integer-exact in f32 (< 2**24). Ordering among
-# masked rows is preserved, so backend/sharding bit-parity survives masking.
-SHORTLIST_MASK_PENALTY = 2.0 ** 22
+# The integer-exact penalty added to the phase-1 distance of masked-out
+# support rows lives with the kernel that applies it natively; re-exported
+# here (its historical home) for the engine and the test suite.
+from repro.kernels.shortlist import SHORTLIST_MASK_PENALTY  # noqa: E402
 
 
 def lut_shortlist(q_values: jax.Array, s_values: jax.Array, enc: Encoding,
@@ -211,9 +209,9 @@ def lut_shortlist(q_values: jax.Array, s_values: jax.Array, enc: Encoding,
     """Fused shortlist: (B, k) distances + indices without materialising the
     (B, N) distance matrix in HBM (kernels/shortlist.py).
 
-    valid: optional (N,) bool; invalid rows get SHORTLIST_MASK_PENALTY added
-    to their distance (folded into one extra LUT column so the kernel needs
-    no mask plumbing) and therefore sort after every valid row.
+    valid: optional (N,) bool; the kernel handles invalid rows natively
+    (a per-row SHORTLIST_MASK_PENALTY block stream), so they sort after
+    every valid row with no caller-side mask plumbing.
     proj: optional precomputed write-time projection (MemoryStore.proj),
     bit-identical to recomputing it from s_values here.
     """
@@ -221,9 +219,4 @@ def lut_shortlist(q_values: jax.Array, s_values: jax.Array, enc: Encoding,
     q1h = query_onehot(q_values, dtype)
     sp = support_projection(s_values, enc, dtype) if proj is None \
         else proj.astype(dtype)
-    if valid is not None:
-        ones = jnp.ones((q1h.shape[0], 1), q1h.dtype)
-        pen = jnp.where(valid, 0.0, SHORTLIST_MASK_PENALTY)[:, None]
-        q1h = jnp.concatenate([q1h, ones], axis=1)
-        sp = jnp.concatenate([sp, pen.astype(sp.dtype)], axis=1)
-    return shortlist_kernel.lut_shortlist_pallas(q1h, sp, k)
+    return shortlist_kernel.lut_shortlist_pallas(q1h, sp, k, valid=valid)

@@ -1,13 +1,23 @@
 """Pallas TPU kernel: fused AVSS shortlist (LUT distance matmul + top-k).
 
-Phase 1 of the two-phase search -- and, since the ideal-serving rework, the
-unsharded `ideal` mode of `RetrievalEngine.search` at large N (>=
-engine.IDEAL_FUSED_MIN_ROWS) -- normally materialises the full (B, N)
-distance matrix in HBM, then runs lax.top_k over it. This kernel fuses the
-two: the grid walks the support rows tile by tile, each step computes the
-(tile_b, tile_n) distance block on the MXU and folds it into a running
-per-query top-k buffer that lives in the (revisited) output block -- HBM
-traffic drops from O(B*N) to O(B*k + N*4d).
+This kernel is the ONE shortlist implementation of the engine: phase 1 of
+the two-phase search and the `ideal` serving mode both stream through it at
+large N -- unsharded, and (since the sharded-fused rework) per shard inside
+the `shard_map` bodies of repro/engine/sharded.py. The dense alternative
+materialises the full (B, N) distance matrix in HBM, then runs lax.top_k
+over it. This kernel fuses the two: the grid walks the support rows tile by
+tile, each step computes the (tile_b, tile_n) distance block on the MXU and
+folds it into a running per-query top-k buffer that lives in the
+(revisited) output block -- HBM traffic drops from O(B*N) to
+O(B*k + N*4d).
+
+Masked rows (never-written slots, ragged-shard label -1 pads) are handled
+natively: `valid` enters the kernel as a per-row penalty vector
+(0 on valid rows, the integer-exact SHORTLIST_MASK_PENALTY on masked ones)
+with its own block stream, so masked rows rank after every valid row while
+preserving their relative order -- no extra LUT column, no caller-side
+mask plumbing, and shard-local (ragged, non-tile-aligned) row blocks work
+unchanged because the wrapper pads any N up to the tile grid.
 
 Tie-breaking contract (bit-identical to jax.lax.top_k on -dist): candidates
 are ranked by (distance, support row) lexicographically ascending.
@@ -36,9 +46,19 @@ DEFAULT_TILE_B = 8
 DEFAULT_TILE_N = 512
 _IDX_SENTINEL = 2**30  # pads the buffer before k finite candidates exist
 
+# Added to the phase-1 distance of masked-out support rows (never-written
+# slots, ragged-shard label -1 pad rows). A power of two, so it is exact in
+# bf16/f32; > any real LUT distance (3 * d * sum(weights) stays far below
+# 2**22 for every paper geometry) and small enough that dist + penalty
+# remains integer-exact in f32 (< 2**24). Ordering among masked rows is
+# preserved, so backend/sharding bit-parity survives masking. Re-exported
+# as repro.kernels.ops.SHORTLIST_MASK_PENALTY (its historical home).
+SHORTLIST_MASK_PENALTY = 2.0 ** 22
 
-def _shortlist_kernel(q_ref, s_ref, d_ref, i_ref, *, k: int, tile_n: int,
-                      n_real: int):
+
+def _shortlist_kernel(q_ref, s_ref, *refs, k: int, tile_n: int,
+                      n_real: int, masked: bool):
+    pen_ref, d_ref, i_ref = refs if masked else (None, *refs)
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -52,6 +72,8 @@ def _shortlist_kernel(q_ref, s_ref, d_ref, i_ref, *, k: int, tile_n: int,
         q_ref[...], s_ref[...],
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
+    if masked:
+        dist = dist + pen_ref[...]         # (1, tile_n) row penalty stream
     n_abs = (j * tile_n
              + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1))
     dist = jnp.where(n_abs < n_real, dist, jnp.inf)  # padded support rows
@@ -81,6 +103,7 @@ def _shortlist_kernel(q_ref, s_ref, d_ref, i_ref, *, k: int, tile_n: int,
 
 
 def lut_shortlist_pallas(q_onehot: jax.Array, s_proj: jax.Array, k: int, *,
+                         valid: jax.Array | None = None,
                          tile_b: int = DEFAULT_TILE_B,
                          tile_n: int = DEFAULT_TILE_N,
                          interpret: bool | None = None
@@ -89,12 +112,41 @@ def lut_shortlist_pallas(q_onehot: jax.Array, s_proj: jax.Array, k: int, *,
 
     Returns (dist (B, k) f32, indices (B, k) int32), ranked ascending by
     (distance, support row) -- the exact order jax.lax.top_k(-dist) yields.
-    Requires k <= N.
+    Requires k <= N. N may be any size (ragged shard-local blocks included);
+    rows are padded up to the tile grid internally and padded rows can never
+    enter the top-k.
+
+    valid: optional (N,) bool row mask. Masked rows get the integer-exact
+    SHORTLIST_MASK_PENALTY added to their distance INSIDE the kernel (one
+    (1, tile_n) penalty block per grid step), so they rank after every valid
+    row, keep their relative (distance, row) order, and surface the penalty
+    in their returned dist -- bit-identical to penalising a dense (B, N)
+    matrix before lax.top_k.
+
+    Example -- supports with constant rows (row r at distance 3*r from the
+    all-zeros query) and row 2 masked out:
+
+    >>> import jax, jax.numpy as jnp
+    >>> q = jax.nn.one_hot(jnp.zeros((2, 3), jnp.int32), 4).reshape(2, 12)
+    >>> s = jnp.tile(jnp.arange(6, dtype=jnp.float32)[:, None], (1, 12))
+    >>> valid = jnp.array([True, True, False, True, True, True])
+    >>> dist, idx = lut_shortlist_pallas(q, s, 3, valid=valid)
+    >>> idx[0].tolist()            # masked row 2 ranks after every valid row
+    [0, 1, 3]
+    >>> dist[0].tolist()
+    [0.0, 3.0, 9.0]
+    >>> _, idx_all = lut_shortlist_pallas(q, s, 6, valid=valid)
+    >>> idx_all[0].tolist()        # ...but keeps its relative order at the tail
+    [0, 1, 3, 4, 5, 2]
     """
     B, K = q_onehot.shape
     N, K2 = s_proj.shape
     assert K == K2, (K, K2)
     assert 0 < k <= N, (k, N)
+    if q_onehot.dtype != s_proj.dtype:     # mixed f32 query / bf16 proj is
+        dt = jnp.promote_types(q_onehot.dtype, s_proj.dtype)  # exact: both
+        q_onehot = q_onehot.astype(dt)     # hold small integers
+        s_proj = s_proj.astype(dt)
     tile_b = min(tile_b, B)
     tile_n = min(tile_n, max(N, 1))
     pad_b = (-B) % tile_b
@@ -107,23 +159,36 @@ def lut_shortlist_pallas(q_onehot: jax.Array, s_proj: jax.Array, k: int, *,
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     grid = (Bp // tile_b, Np // tile_n)  # N axis innermost: sequential merge
+    args = [q_onehot, s_proj]
+    in_specs = [
+        pl.BlockSpec((tile_b, K), lambda i, j: (i, 0)),
+        pl.BlockSpec((tile_n, K), lambda i, j: (j, 0)),
+    ]
+    if valid is not None:
+        pen = jnp.where(valid, 0.0,
+                        SHORTLIST_MASK_PENALTY).astype(jnp.float32)[None, :]
+        if pad_n:
+            pen = jnp.pad(pen, ((0, 0), (0, pad_n)))
+        args.append(pen)
+        in_specs.append(pl.BlockSpec((1, tile_n), lambda i, j: (0, j)))
     kernel = functools.partial(_shortlist_kernel, k=k, tile_n=tile_n,
-                               n_real=N)
-    dist, idx = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((tile_b, K), lambda i, j: (i, 0)),
-            pl.BlockSpec((tile_n, K), lambda i, j: (j, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((tile_b, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((tile_b, k), lambda i, j: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Bp, k), jnp.float32),
-            jax.ShapeDtypeStruct((Bp, k), jnp.int32),
-        ],
-        interpret=interpret,
-    )(q_onehot, s_proj)
+                               n_real=N, masked=valid is not None)
+    # the scope tags every op of the fused path in compiled HLO metadata, so
+    # tests can assert the kernel actually engaged (or stayed out) on a
+    # given route -- see tests/test_engine.py
+    with jax.named_scope("shortlist_fused"):
+        dist, idx = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((tile_b, k), lambda i, j: (i, 0)),
+                pl.BlockSpec((tile_b, k), lambda i, j: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((Bp, k), jnp.float32),
+                jax.ShapeDtypeStruct((Bp, k), jnp.int32),
+            ],
+            interpret=interpret,
+        )(*args)
     return dist[:B], idx[:B]

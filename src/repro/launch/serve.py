@@ -23,7 +23,8 @@ from repro.models.sharding import Rules
 
 def serve(arch: str, smoke: bool, batch: int, steps: int, prompt_len: int,
           retrieval: bool = False, retrieval_mode: str = "two-phase",
-          retrieval_backend: str = "auto", retrieval_k: int = 32):
+          retrieval_backend: str = "auto", retrieval_k: int = 32,
+          retrieval_fused_min_rows: int | None = None):
     cfg = load_config(arch, smoke=smoke)
     rules = Rules(batch=(), fsdp=(), tensor=(), expert=())
     params = tfm.init(jax.random.PRNGKey(0), cfg)
@@ -45,7 +46,12 @@ def serve(arch: str, smoke: bool, batch: int, steps: int, prompt_len: int,
         # program once at write time (values + proj + s_grid); the decode
         # loop below jits against the store's constant layouts
         mstate = MemoryStore.create(mem_cfg).calibrate(vecs).write(vecs, toks)
-        engine = (RetrievalEngine(mem_cfg.search, backend=retrieval_backend)
+        # fused-threshold override (e.g. a TPU-measured dense-vs-fused
+        # crossover) applies engine-wide without a code change
+        eng_kw = {} if retrieval_fused_min_rows is None else \
+            {"fused_min_rows": retrieval_fused_min_rows}
+        engine = (RetrievalEngine(mem_cfg.search, backend=retrieval_backend,
+                                  **eng_kw)
                   if retrieval_mode in ("two-phase", "ideal") else None)
         mode = "ideal" if retrieval_mode == "ideal" else "two_phase"
         step_fn = jax.jit(steps_lib.make_serve_step_with_mcam(
@@ -92,10 +98,15 @@ def main(argv=None):
     ap.add_argument("--retrieval-backend", default="auto",
                     choices=["auto", "ref", "pallas", "mxu", "fused"])
     ap.add_argument("--retrieval-k", type=int, default=32)
+    ap.add_argument("--retrieval-fused-min-rows", type=int, default=None,
+                    help="override the fused-shortlist row threshold "
+                         "(engine.IDEAL_FUSED_MIN_ROWS default; applies "
+                         "per shard-local block on sharded stores) -- a "
+                         "perf knob, results are bit-identical either way")
     args = ap.parse_args(argv)
     serve(args.arch, args.smoke, args.batch, args.steps, args.prompt_len,
           args.retrieval, args.retrieval_mode, args.retrieval_backend,
-          args.retrieval_k)
+          args.retrieval_k, args.retrieval_fused_min_rows)
 
 
 if __name__ == "__main__":

@@ -214,6 +214,194 @@ def test_ideal_routes_through_fused_kernel_at_large_n(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# Fused shortlist on the SHARDED paths (ISSUE 4 tentpole): the kernel is the
+# one shortlist implementation across unsharded/sharded x ref/mxu/fused.
+# ---------------------------------------------------------------------------
+
+
+def test_shortlist_kernel_native_mask_odd_n_ties():
+    """kernels/shortlist.py handles masked rows natively (per-row penalty
+    block stream) and non-tile-aligned row counts: bit-identical to the
+    dense penalised matrix + lax.top_k, masked rows in the top-k included,
+    on a tie-heavy 45-row (odd) store with a bf16 projection."""
+    from repro.core.encodings import make_encoding
+    from repro.kernels import ops as kops
+    from repro.kernels.shortlist import (SHORTLIST_MASK_PENALTY,
+                                         lut_shortlist_pallas)
+    enc = make_encoding("mtmc", 8)
+    base = jax.random.randint(jax.random.PRNGKey(0), (9, 20), 0, enc.levels)
+    sv = jnp.concatenate([base] * 5, axis=0)[:45]          # 45 rows, ties
+    qv = jax.random.randint(jax.random.PRNGKey(1), (5, 20), 0, 4)
+    valid = (jnp.arange(45) % 3) != 0                      # 15 masked rows
+    q1h = kops.query_onehot(qv, jnp.float32)
+    sp32 = kops.support_projection(sv, enc, jnp.float32)
+    dense = q1h @ sp32.T + jnp.where(valid, 0.0,
+                                     SHORTLIST_MASK_PENALTY)[None]
+    neg, idx_ref = jax.lax.top_k(-dense, 40)               # masked in top-k
+    sp16 = kops.support_projection(sv, enc)                # bf16 write-time
+    dist, idx = lut_shortlist_pallas(q1h, sp16, 40, valid=valid)
+    np.testing.assert_array_equal(np.asarray(-neg), np.asarray(dist))
+    np.testing.assert_array_equal(np.asarray(idx_ref), np.asarray(idx))
+    # the penalty is integer-exact and visible on masked candidates
+    assert float(dist[0, -1]) >= SHORTLIST_MASK_PENALTY
+
+
+def test_sharded_fused_shortlist_matches_dense_and_unsharded():
+    """Sharded `ideal` and `two_phase` above the fused threshold run the
+    fused Pallas kernel inside shard_map (asserted on compiled HLO via the
+    shortlist_fused scope tag) and stay bit-identical to the sharded-dense
+    path AND the unsharded ref store -- ties and masked rows in the top-k
+    included."""
+    from repro.engine import MemoryStore, SearchRequest
+    cfg = SearchConfig("mtmc", cl=8, mode="avss", use_kernel="ref")
+    base = jax.random.randint(jax.random.PRNGKey(0), (8, 20), 0,
+                              cfg.enc.levels)
+    sv = jnp.concatenate([base] * 9, axis=0)               # 72 rows, ties
+    labels = jnp.where(jnp.arange(72) % 4 == 0, -1,
+                       jnp.arange(72)).astype(jnp.int32)   # 18 masked rows
+    store = MemoryStore.from_quantized(sv, labels, cfg)
+    qv = jax.random.randint(jax.random.PRNGKey(1), (5, 20), 0, 4)
+    mesh = jax.make_mesh((1,), ("data",))
+    sstore = store.shard(mesh, ("data",))
+    eng = RetrievalEngine(cfg, backend="mxu")
+    for mode in ("ideal", "two_phase"):
+        ref = RetrievalEngine(cfg, backend="ref").search(
+            store, qv, SearchRequest(mode=mode, k=60))
+        for fmr, fused in ((1, True), (1 << 30, False)):
+            req = SearchRequest(mode=mode, k=60, fused_min_rows=fmr)
+            with mesh:
+                got = jax.jit(lambda st, q, r=req: eng.search(st, q, r))(
+                    sstore, qv)
+                hlo = jax.jit(
+                    lambda st, q, r=req: eng.search(st, q, r).votes
+                ).lower(sstore, qv).compile().as_text()
+            for key in ("votes", "dist", "indices", "labels"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(ref, key)),
+                    np.asarray(getattr(got, key)),
+                    err_msg=f"{mode}/fmr={fmr}/{key}")
+            assert ("shortlist_fused" in hlo) == fused, (mode, fmr)
+        # masked candidates did reach the merged top-k (k=60 > 54 valid)
+        assert np.isneginf(np.asarray(ref.votes)).any(), mode
+
+
+def test_fused_min_rows_knob_engine_and_request(monkeypatch):
+    """IDEAL_FUSED_MIN_ROWS is a default, not a constant: the engine field
+    and the per-request SearchRequest.fused_min_rows override both steer
+    the dispatch (request wins), so a TPU-measured crossover applies with
+    no code change."""
+    from repro.engine import MemoryStore, SearchRequest
+    from repro.engine.engine import IDEAL_FUSED_MIN_ROWS
+    from repro.kernels import ops as kernel_ops
+    cfg = SearchConfig("mtmc", cl=8, mode="avss", use_kernel="auto")
+    sv = jax.random.randint(jax.random.PRNGKey(0), (64, 16), 0,
+                            cfg.enc.levels)
+    store = MemoryStore.from_quantized(
+        sv, jnp.arange(64, dtype=jnp.int32), cfg)
+    qv = jax.random.randint(jax.random.PRNGKey(1), (3, 16), 0, 4)
+    calls = []
+    orig = kernel_ops.lut_shortlist
+    monkeypatch.setattr(kernel_ops, "lut_shortlist",
+                        lambda *a, **kw: (calls.append(1), orig(*a, **kw))[1])
+    default_eng = RetrievalEngine(cfg)
+    assert default_eng.fused_min_rows == IDEAL_FUSED_MIN_ROWS
+    req = SearchRequest(mode="ideal", k=8)
+    default_eng.search(store, qv, req)           # 64 < 4096: dense
+    assert not calls
+    low_eng = RetrievalEngine(cfg, fused_min_rows=8)
+    low_eng.search(store, qv, req)               # 64 >= 8: fused
+    assert len(calls) == 1
+    # request override wins over the engine field, in both directions
+    low_eng.search(store, qv,
+                   SearchRequest(mode="ideal", k=8, fused_min_rows=1 << 30))
+    assert len(calls) == 1
+    default_eng.search(store, qv,
+                       SearchRequest(mode="ideal", k=8, fused_min_rows=16))
+    assert len(calls) == 2
+    # the two-phase shortlist obeys the same threshold (one implementation)
+    default_eng.search(store, qv,
+                       SearchRequest(mode="two_phase", k=8,
+                                     fused_min_rows=16))
+    assert len(calls) == 3
+
+
+@pytest.mark.slow
+def test_sharded_fused_8dev_ragged_bit_identical():
+    """Acceptance (ISSUE 4 tentpole): on a forced 8-device mesh with a
+    RAGGED capacity-100 split (13-row local blocks, 4 pad rows), sharded
+    `ideal` and `two_phase` above the fused threshold run the fused Pallas
+    shortlist kernel inside shard_map (compiled-HLO scope-tag assertion)
+    with results bit-identical to the sharded-dense path and the unsharded
+    store -- tie-heavy rows and masked rows (70 empty slots + 4 pads)
+    inside the merged top-k."""
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.avss import SearchConfig
+        from repro.core.memory import MemoryConfig
+        from repro.engine import MemoryStore, RetrievalEngine, SearchRequest
+
+        cfg = MemoryConfig(capacity=100, dim=24,
+                           search=SearchConfig("mtmc", cl=8, mode="avss",
+                                               use_kernel="ref"))
+        base = jax.random.normal(jax.random.PRNGKey(0), (10, 24))
+        vecs = jnp.tile(base, (3, 1))                  # 30 rows, 3x dups
+        labs = jnp.arange(30, dtype=jnp.int32) % 7
+        store = MemoryStore.create(cfg).calibrate(vecs).write(vecs, labs)
+        q = vecs[:6] + 0.02
+        mesh = jax.make_mesh((8,), ("data",))
+        sstore = store.shard(mesh, ("data",))
+        assert sstore.capacity == 104, sstore.capacity  # ragged: 13/shard
+        eng = RetrievalEngine(cfg.search, backend="mxu")
+
+        # k=50 > 30 valid rows: masked (empty + pad) rows reach the top-k;
+        # k_loc = 13 == the full local block, so the merge is exhaustive
+        for mode in ("ideal", "two_phase"):
+            ref = RetrievalEngine(cfg.search, backend="ref").search(
+                store, q, SearchRequest(mode=mode, k=50))
+            assert np.isneginf(np.asarray(ref.votes)).any(), mode
+            outs = {}
+            for tag, fmr in (("fused", 1), ("dense", 1 << 30)):
+                req = SearchRequest(mode=mode, k=50, fused_min_rows=fmr)
+                with mesh:
+                    f = jax.jit(lambda st, qq, r=req: eng.search(st, qq, r))
+                    outs[tag] = f(sstore, q)
+                    hlo = jax.jit(lambda st, qq, r=req: eng.search(
+                        st, qq, r).votes).lower(sstore, q).compile().as_text()
+                assert ("shortlist_fused" in hlo) == (tag == "fused"), (
+                    mode, tag)
+            for tag in ("fused", "dense"):
+                for key in ("votes", "dist", "indices", "labels"):
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(ref, key)),
+                        np.asarray(getattr(outs[tag], key)),
+                        err_msg=f"{mode}/{tag}/{key}")
+
+        # the 'fused' backend fuses unconditionally (no threshold), and the
+        # engine-level field steers the default dispatch
+        with mesh:
+            hlo = jax.jit(lambda st, qq: RetrievalEngine(
+                cfg.search, backend="fused").search(
+                    st, qq, SearchRequest(mode="ideal", k=13)).votes
+                ).lower(sstore, q).compile().as_text()
+            assert "shortlist_fused" in hlo
+            hlo = jax.jit(lambda st, qq: RetrievalEngine(
+                cfg.search, backend="mxu", fused_min_rows=13).search(
+                    st, qq, SearchRequest(mode="two_phase", k=13)).votes
+                ).lower(sstore, q).compile().as_text()
+            assert "shortlist_fused" in hlo
+        print("SHARDED-FUSED-OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARDED-FUSED-OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
 # (c) Two-phase recall@k == 1.0 vs full search on small clustered stores.
 # ---------------------------------------------------------------------------
 
