@@ -17,6 +17,10 @@ Suites:
            sweep) on a forced 8-device host mesh (subprocess, like
            tests/test_distributed.py); writes
            results/bench_engine_sharded.json (CI artifact)
+  hat      hardware-aware training step timings (episodic meta-train step
+           through the engine's differentiable MCAM forward vs the plain
+           pretrain step) + the per-encoding engine.search cost sweep
+           (mtmc/b4e/b4we/sre) -- bench_hat
   roofline dry-run derived roofline terms (benchmarks.roofline; needs the
            dryrun sweep artifacts under results/dryrun)
 
@@ -40,6 +44,7 @@ SUITES = {
     "kernel": "benchmarks.bench_kernels",
     "engine": "benchmarks.bench_engine",
     "engine_sharded": "benchmarks.bench_engine_sharded",
+    "hat": "benchmarks.bench_hat",
     "roofline": "benchmarks.roofline",
 }
 

@@ -194,6 +194,33 @@ def main():
     print(f"\n  HAT gain (mtmc):          {d_hat:+.3f}   (paper: +1.25%..1.8%)")
     print(f"  MTMC vs B4E (HAT ctrl):   {d_enc:+.3f}   (paper: +0.34%..4.91%)")
 
+    serve_loop_check(params_hat, sampler, hat_cfg)
+
+
+def serve_loop_check(params, sampler, hat_cfg):
+    """Close the train->write->serve loop: the HAT controller's noiseless
+    in-training scores (engine.episode_scores -- the exact forward stage 2
+    trained through) must be BIT-IDENTICAL to serving the same supports
+    through MemoryStore.calibrate/write + engine.search. This is the
+    train/serve parity contract (tests/test_train_serve_parity.py)."""
+    from repro.core.avss import class_mean_votes
+    from repro.engine import MemoryStore, RetrievalEngine, SearchRequest
+    eng = RetrievalEngine(hat_cfg.search)
+    ep = sampler.episode(4242)
+    s_emb = embed_apply(params["backbone"], jnp.asarray(ep.support_images))
+    q_emb = embed_apply(params["backbone"], jnp.asarray(ep.query_images))
+    s_lab = jnp.asarray(ep.support_labels)
+    scores = eng.episode_scores(q_emb, s_emb, s_lab, ep.n_way,
+                                clip_std=hat_cfg.clip_std,
+                                sa_tau=hat_cfg.sa_tau, noisy=False)
+    store = MemoryStore.from_episode(s_emb, q_emb, s_lab, hat_cfg.search,
+                                     clip_std=hat_cfg.clip_std)
+    res = eng.search(store, q_emb, SearchRequest(mode="full", noisy=False))
+    served = class_mean_votes(res.votes, store.labels, ep.n_way)
+    print(f"\n== train->write->serve loop ==\n"
+          f"  in-training scores == served scores (bitwise): "
+          f"{bool(jnp.array_equal(scores, served))}")
+
 
 if __name__ == "__main__":
     main()

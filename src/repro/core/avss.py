@@ -86,6 +86,20 @@ def _segment_dims(x: jax.Array, string_len: int) -> jax.Array:
     return x.reshape(*x.shape[:-1], seg, string_len)
 
 
+def layout_support_words(words: jax.Array,
+                         string_len: int = mcam_lib.DEFAULT_STRING_LEN
+                         ) -> jax.Array:
+    """Code words (..., d, L) -> string grid (..., n_seg, L, string_len).
+
+    The layout half of `layout_support`, split out so hardware-aware
+    training can feed STE-encoded (float, differentiable) words through the
+    SAME placement the engine programs at write time: pure pad/reshape/
+    transpose, so gradients flow and the forward is bit-identical."""
+    codes = jnp.moveaxis(words, -1, -2)          # (..., L, d)
+    codes = _segment_dims(codes, string_len)     # (..., L, seg, sl)
+    return jnp.moveaxis(codes, -3, -2)           # (..., seg, L, sl)
+
+
 def layout_support(values: jax.Array, enc: Encoding,
                    string_len: int = mcam_lib.DEFAULT_STRING_LEN) -> jax.Array:
     """Quantized support values (N, d) -> string grid (N, n_seg, L, string_len).
@@ -99,10 +113,7 @@ def layout_support(values: jax.Array, enc: Encoding,
     serve decode step does NOT re-lay out the store per step.
     """
     with jax.named_scope("layout_support"):
-        codes = enc.encode(values)                   # (N, d, L)
-        codes = jnp.moveaxis(codes, -1, -2)          # (N, L, d)
-        codes = _segment_dims(codes, string_len)     # (N, L, seg, sl)
-        return jnp.moveaxis(codes, -3, -2)           # (N, seg, L, sl)
+        return layout_support_words(enc.encode(values), string_len)
 
 
 def layout_query(values: jax.Array, enc: Encoding, mode: Mode,
@@ -121,24 +132,64 @@ def layout_query(values: jax.Array, enc: Encoding, mode: Mode,
 # ---------------------------------------------------------------------------
 
 
+def _string_ids(n: int, seg: int, L: int) -> jax.Array:
+    """(N, seg, L) absolute string ids -- the noise-counter coordinates
+    shared by the reference search, the rescore path and the episodic
+    training forward (absolute ids are what make noise shard-invariant)."""
+    return (jnp.arange(n, dtype=jnp.uint32)[:, None, None] * (seg * L)
+            + jnp.arange(seg, dtype=jnp.uint32)[None, :, None] * L
+            + jnp.arange(L, dtype=jnp.uint32)[None, None, :])
+
+
+def votes_from_mismatch(mm: jax.Array, qidx: jax.Array, weights: jax.Array,
+                        cfg: SearchConfig, thresholds: jax.Array, *,
+                        noisy: bool | None = None,
+                        noise_stream: jax.Array | None = None,
+                        step_fn=None) -> tuple[jax.Array, jax.Array]:
+    """The ONE mismatch-grid -> (votes, dist) forward.
+
+    mm:   (..., N, seg, L, sl) per-cell mismatch levels (float; integer-
+          valued in serving, STE-quantized in training).
+    qidx: integer query coordinates broadcastable to mm.shape[:-1]
+          (a scalar in the per-query reference search, an
+          (B, 1, 1, 1) arange in the batched episodic forward) -- the
+          absolute coordinates feeding the counter-based noise, so the
+          same (query, string) pair draws the same noise everywhere.
+    noisy:        overrides cfg.noisy when not None.
+    noise_stream: optional extra leading noise coordinate (e.g. a
+          training-step-derived stream id). None reproduces the serving
+          noise EXACTLY; a stream id redraws fresh noise per step from
+          the same counter-based family the hardware model uses.
+    step_fn: optional differentiable sense-amp step (mcam.ste_step);
+          forward-identical to the hard comparison.
+
+    Serving (`RetrievalEngine.full`, ref backend) and training
+    (`RetrievalEngine.episode_votes`) both run THIS function, which is the
+    train/serve parity contract: same inputs -> bit-identical votes/dist.
+    """
+    n, seg, L, sl = mm.shape[-4:]
+    if noisy is None:
+        noisy = cfg.noisy
+    if noisy:
+        coords = (qidx, _string_ids(n, seg, L))
+        if noise_stream is not None:
+            coords = (noise_stream,) + coords
+        cur = mcam_lib.string_current(mm, cfg.mcam, noise_idx=coords)
+    else:
+        cur = mcam_lib.string_current(mm, cfg.mcam)
+    votes = mcam_lib.sa_votes(cur, cfg.mcam, thresholds, step_fn=step_fn)
+    votes = (votes * weights[None, None, :]).sum((-1, -2))
+    dist = (mm.sum(-1) * weights[None, None, :]).sum((-1, -2))
+    return votes, dist
+
+
 def _search_one_query(q_grid: jax.Array, s_grid: jax.Array, qidx: jax.Array,
                       weights: jax.Array, cfg: SearchConfig,
                       thresholds: jax.Array) -> tuple[jax.Array, jax.Array]:
     """q_grid (seg, Lq, sl); s_grid (N, seg, L, sl) -> votes (N,), dist (N,)."""
     mm = jnp.abs(q_grid[None].astype(jnp.int32) - s_grid.astype(jnp.int32))
     mm = mm.astype(jnp.float32)                      # (N, seg, L, sl)
-    n, seg, L, sl = mm.shape
-    if cfg.noisy:
-        string_id = (jnp.arange(n, dtype=jnp.uint32)[:, None, None] * (seg * L)
-                     + jnp.arange(seg, dtype=jnp.uint32)[None, :, None] * L
-                     + jnp.arange(L, dtype=jnp.uint32)[None, None, :])
-        cur = mcam_lib.string_current(mm, cfg.mcam, noise_idx=(qidx, string_id))
-    else:
-        cur = mcam_lib.string_current(mm, cfg.mcam)
-    votes = mcam_lib.sa_votes(cur, cfg.mcam, thresholds)  # (N, seg, L)
-    votes = (votes * weights[None, None, :]).sum((-1, -2))
-    dist = (mm.sum(-1) * weights[None, None, :]).sum((-1, -2))
-    return votes, dist
+    return votes_from_mismatch(mm, qidx, weights, cfg, thresholds)
 
 
 def search_quantized(q_values: jax.Array, s_values: jax.Array,
@@ -188,9 +239,19 @@ def predict_1nn(result: dict[str, jax.Array], labels: jax.Array) -> jax.Array:
 
 def class_scores(result: dict[str, jax.Array], labels: jax.Array,
                  n_classes: int) -> jax.Array:
-    """Per-class vote sums (B, n_classes) -- used by HAT's CE loss."""
+    """Per-class vote sums (B, n_classes) with distance tie-breaking."""
     onehot = jax.nn.one_hot(labels, n_classes, dtype=result["votes"].dtype)
     return score_supports(result) @ onehot
+
+
+def class_mean_votes(votes: jax.Array, labels: jax.Array,
+                     n_classes: int) -> jax.Array:
+    """Mean vote score per class (B, n_classes) -- HAT's episodic logits
+    (paper Sec. 3.3), shared by `meta_loss` and the served evaluation so
+    the two heads agree exactly when the underlying votes do."""
+    onehot = jax.nn.one_hot(labels, n_classes, dtype=votes.dtype)
+    counts = onehot.sum(0) + 1e-8
+    return (votes @ onehot) / counts
 
 
 def predict_class_vote(result, labels, n_classes) -> jax.Array:

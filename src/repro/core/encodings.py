@@ -127,6 +127,53 @@ _ENCODERS = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Differentiable (straight-through) encoders for hardware-aware training.
+#
+# The forward values are EXACTLY the hard encoders above (bit-for-bit on
+# integer-valued inputs); only the backward pass differs. Keeping the STEs
+# here, next to the encoders they wrap, is what guarantees training and
+# serving can never drift: `encode_words_ste(v, enc)` forward ==
+# `enc.encode(v)`, the function the engine traces at write time.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def mtmc_word_ste(v: jax.Array, c: int, cl: int) -> jax.Array:
+    """c-th MTMC code word of (integer-valued) v; backward slope 1/CL
+    (paper Fig. 8(b): the discrete encoder's trend line). Forward equals
+    column c of `_mtmc_encode` exactly."""
+    x = jnp.floor(v / cl)
+    n = v - x * cl
+    return jnp.clip(x + (c >= cl - n), 0, MAX_MISMATCH)
+
+
+def _mtmc_ste_fwd(v, c, cl):
+    return mtmc_word_ste(v, c, cl), None
+
+
+def _mtmc_ste_bwd(c, cl, _, g):
+    return (g / cl,)
+
+
+mtmc_word_ste.defvjp(_mtmc_ste_fwd, _mtmc_ste_bwd)
+
+
+def encode_words_ste(v: jax.Array, enc: Encoding) -> jax.Array:
+    """(...,) integer-valued float values -> (..., length) code words with
+    straight-through gradients. Forward is bit-identical to `enc.encode`
+    (the write-time encoder); backward follows the encoder's trend line
+    (slope 1/CL for MTMC, unit slope spread over the words otherwise)."""
+    if enc.name == "mtmc":
+        words = [mtmc_word_ste(v, c, enc.cl) for c in range(enc.cl)]
+        return jnp.stack(words, axis=-1)
+    hard = enc.encode(v.astype(jnp.int32)).astype(jnp.float32)
+    # identity-STE fallback: hard forward (the +0 term is exactly zero),
+    # gradient 1/length to each word
+    return hard + (v[..., None] - jax.lax.stop_gradient(v[..., None])) \
+        / enc.length
+
+
 def make_encoding(name: str, cl: int) -> Encoding:
     """Factory. `cl` is the code-word-length parameter from the paper:
     word count for mtmc/b4e, repeat count for sre, base word count for b4we.

@@ -7,75 +7,56 @@ Two-stage flow:
      simulator in the forward pass: asymmetric fake-quant (4-level query /
      l-level support), std clipping, MTMC encoding with a 1/CL
      straight-through gradient, series-resistance string currents with
-     Gaussian device + read noise, sense-amp thresholding with a
-     sigmoid-gradient STE, and vote accumulation. CE is taken on the per-class
-     vote scores, so the controller learns representations that survive the
-     hardware.
+     counter-hash device + read noise, sense-amp thresholding with a
+     sigmoid-gradient STE, and vote accumulation. CE is taken on the
+     per-class vote scores, so the controller learns representations that
+     survive the hardware.
+
+Since the train/serve unification the differentiable forward is NOT a
+private re-implementation: `simulate_mcam` delegates to
+`RetrievalEngine.episode_votes`, which composes the same shared primitives
+the serving engine traces (`quantization.affine_quantize`,
+`encodings.encode_words_ste` -> `avss.layout_support_words`,
+`avss.votes_from_mismatch` -> `mcam.string_current`/`sa_votes`), with the
+straight-through estimators wrapped AROUND them. The moved STEs keep
+re-exports here (their canonical homes: `quantization.ste_round`,
+`encodings.mtmc_word_ste`, `mcam.ste_step` -- see docs/migration.md);
+training and serving therefore cannot drift -- the in-episode noiseless
+votes are bit-identical to `engine.search` on a store programmed with the
+same supports (tests/test_train_serve_parity.py).
 
 Everything is functional JAX: ``apply_fn(params, images) -> embeddings``.
+
+A 2-way toy episode through the full simulator:
+
+>>> import jax, jax.numpy as jnp
+>>> from repro.core.avss import SearchConfig
+>>> from repro.core.hat import HATConfig, simulate_mcam
+>>> hat = HATConfig(search=SearchConfig("mtmc", cl=2, mode="avss",
+...                                     use_kernel="ref"))
+>>> q = jnp.eye(2); s = jnp.eye(2); labels = jnp.array([0, 1])
+>>> scores = simulate_mcam(q, s, labels, 2, hat, jax.random.PRNGKey(0),
+...                        noisy=False)
+>>> scores.shape                      # (queries, classes) vote logits
+(2, 2)
+>>> bool((scores[0, 0] > scores[0, 1]) & (scores[1, 1] > scores[1, 0]))
+True
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import avss as avss_lib
-from repro.core import mcam as mcam_lib
 from repro.core.avss import SearchConfig
-from repro.core.encodings import MAX_MISMATCH
-from repro.core.quantization import QuantSpec, fake_quant, quantize_asymmetric
-
-
-# ---------------------------------------------------------------------------
-# Straight-through pieces.
-# ---------------------------------------------------------------------------
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(1,))
-def ste_step(x: jax.Array, tau: float) -> jax.Array:
-    """Hard step forward; sigmoid gradient backward (paper Fig. 8(c))."""
-    return (x > 0).astype(jnp.float32)
-
-
-def _step_fwd(x, tau):
-    return (x > 0).astype(jnp.float32), x
-
-
-def _step_bwd(tau, x, g):
-    s = jax.nn.sigmoid(x / tau)
-    return (g * s * (1 - s) / tau,)
-
-
-ste_step.defvjp(_step_fwd, _step_bwd)
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
-def mtmc_word_ste(v: jax.Array, c: int, cl: int) -> jax.Array:
-    """c-th MTMC code word of (integer-valued) v; backward slope 1/CL
-    (paper Fig. 8(b): the discrete encoder's trend line)."""
-    x = jnp.floor(v / cl)
-    n = v - x * cl
-    return jnp.clip(x + (c >= cl - n), 0, MAX_MISMATCH)
-
-
-def _mtmc_fwd(v, c, cl):
-    return mtmc_word_ste(v, c, cl), None
-
-
-def _mtmc_bwd(c, cl, _, g):
-    return (g / cl,)
-
-
-mtmc_word_ste.defvjp(_mtmc_fwd, _mtmc_bwd)
-
-
-# ---------------------------------------------------------------------------
-# Differentiable MCAM forward simulation.
-# ---------------------------------------------------------------------------
+# Canonical homes of the straight-through estimators (migration re-exports:
+# callers that imported them from here keep working).
+from repro.core.encodings import encode_words_ste, mtmc_word_ste  # noqa: F401
+from repro.core.mcam import ste_step  # noqa: F401
+from repro.core.quantization import (QuantSpec, fake_quant,  # noqa: F401
+                                     quantize_asymmetric)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,68 +67,20 @@ class HATConfig:
     temperature: float = 0.15  # softmax temperature on class vote scores
 
 
-def _encode_words_ste(v: jax.Array, cfg: SearchConfig) -> jax.Array:
-    """(..., d) integer-valued values -> (..., d, L) words with STE grads."""
-    if cfg.encoding == "mtmc":
-        words = [mtmc_word_ste(v, c, cfg.cl) for c in range(cfg.cl)]
-        return jnp.stack(words, axis=-1)
-    # Non-MTMC HAT falls back to exact encode with unit STE on values.
-    enc = cfg.enc
-    hard = enc.encode(v.astype(jnp.int32)).astype(jnp.float32)
-    return hard + (v[..., None] - jax.lax.stop_gradient(v[..., None])) / enc.length
-
-
 def simulate_mcam(q_emb: jax.Array, s_emb: jax.Array, s_labels: jax.Array,
                   n_classes: int, hat: HATConfig, key: jax.Array,
                   noisy: bool = True) -> jax.Array:
     """Differentiable end-to-end MCAM search -> (B, n_classes) class scores.
 
-    q_emb (B, dim), s_emb (N, dim) are float controller outputs.
+    q_emb (B, dim), s_emb (N, dim) are float controller outputs. Thin
+    wrapper over `RetrievalEngine.episode_scores` -- the engine's
+    differentiable episodic entry point, kept here under its historical
+    name for existing callers.
     """
-    cfg = hat.search
-    enc = cfg.enc
-    sl = cfg.mcam.string_len
-
-    if cfg.mode == "avss":
-        q, v = quantize_asymmetric(q_emb, s_emb, enc.levels, hat.clip_std, 4)
-    else:
-        q, _, rng = fake_quant(s_emb, QuantSpec(enc.levels, hat.clip_std))
-        v = q
-        q, _, _ = fake_quant(q_emb, QuantSpec(enc.levels, hat.clip_std), rng)
-
-    s_words = _encode_words_ste(v, cfg)                      # (N, d, L)
-    if cfg.mode == "avss":
-        q_words = q[..., None]                               # (B, d, 1)
-    else:
-        q_words = _encode_words_ste(q, cfg)                  # (B, d, L)
-
-    # (B, N, d, L) per-word mismatch; |.| keeps gradients to both sides.
-    mm = jnp.abs(q_words[:, None] - s_words[None])
-    # segment dims into strings: (B, N, L, seg, sl)
-    mm = jnp.moveaxis(mm, -1, -2)
-    mm = avss_lib._segment_dims(mm, sl)
-    mm = jnp.moveaxis(mm, -3, -2)                            # (B, N, seg, L, sl)
-
-    mcfg = cfg.mcam
-    if noisy:
-        kd, kr = jax.random.split(key)
-        dn = jax.random.normal(kd, mm.shape)
-        m_eff = jnp.clip(mm + mcfg.sigma_device * dn, 0.0, float(MAX_MISMATCH))
-    else:
-        m_eff = mm
-    r = jnp.power(jnp.float32(mcfg.rho), m_eff).sum(-1)
-    cur = jnp.float32(sl) / r
-    if noisy:
-        cur = cur * (1.0 + mcfg.sigma_read * jax.random.normal(kr, cur.shape))
-
-    th = jnp.asarray(mcfg.thresholds())
-    votes = ste_step(cur[..., None] - th, hat.sa_tau).sum(-1)  # (B,N,seg,L)
-    w = enc.weights_array()
-    votes = (votes * w[None, None, None, :]).sum((-1, -2))     # (B, N)
-
-    onehot = jax.nn.one_hot(s_labels, n_classes, dtype=votes.dtype)
-    counts = onehot.sum(0) + 1e-8
-    return (votes @ onehot) / counts                           # mean vote/class
+    from repro.engine import RetrievalEngine
+    return RetrievalEngine(hat.search).episode_scores(
+        q_emb, s_emb, s_labels, n_classes, clip_std=hat.clip_std,
+        sa_tau=hat.sa_tau, key=key, noisy=noisy)
 
 
 # ---------------------------------------------------------------------------
@@ -178,7 +111,11 @@ def meta_loss(params, episode, apply_fn, hat: HATConfig, key, noisy=True):
 
 def make_train_steps(apply_fn, hat: HATConfig, optimizer):
     """Returns jitted (pretrain_step, meta_step) closures over an optimizer
-    with (init, update) in the optax-like protocol from repro.optim."""
+    with (init, update) in the optax-like protocol from repro.optim.
+
+    The launch layer builds its two-stage trainer (with mesh placement and
+    per-stage optimizers) via `repro.launch.steps.make_hat_train_steps`;
+    this simpler historical helper remains for single-host callers."""
 
     @jax.jit
     def pretrain_step(params, opt_state, batch):

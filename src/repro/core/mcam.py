@@ -29,6 +29,7 @@ reproducible across shardings.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -146,11 +147,40 @@ def string_current(cell_mismatch: jax.Array, cfg: MCAMConfig, *,
     return current_from_resistance(r, n_cells, cfg, read_noise=rn)
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def ste_step(x: jax.Array, tau: float) -> jax.Array:
+    """Sense-amp comparator STE: hard step forward, sigmoid gradient
+    backward (paper Fig. 8(c)). The forward is EXACTLY the comparison the
+    serving `sa_votes` makes -- (x > 0) == (current > threshold) -- so
+    training through it and serving without it agree bit-for-bit."""
+    return (x > 0).astype(jnp.float32)
+
+
+def _ste_step_fwd(x, tau):
+    return (x > 0).astype(jnp.float32), x
+
+
+def _ste_step_bwd(tau, x, g):
+    s = jax.nn.sigmoid(x / tau)
+    return (g * s * (1 - s) / tau,)
+
+
+ste_step.defvjp(_ste_step_fwd, _ste_step_bwd)
+
+
 def sa_votes(currents: jax.Array, cfg: MCAMConfig,
-             thresholds: jax.Array | None = None) -> jax.Array:
-    """Sense-amplifier voting: count of reference levels the current exceeds."""
+             thresholds: jax.Array | None = None, *,
+             step_fn=None) -> jax.Array:
+    """Sense-amplifier voting: count of reference levels the current exceeds.
+
+    step_fn: optional differentiable step (e.g. `partial(ste_step, tau=...)`
+    via a lambda) used by hardware-aware training; its forward must equal
+    the hard comparison, which `ste_step` guarantees -- the vote VALUES are
+    identical either way, only gradients differ."""
     th = jnp.asarray(cfg.thresholds() if thresholds is None else thresholds)
-    return (currents[..., None] > th).sum(-1).astype(jnp.float32)
+    if step_fn is None:
+        return (currents[..., None] > th).sum(-1).astype(jnp.float32)
+    return step_fn(currents[..., None] - th).sum(-1)
 
 
 def ideal_current(total_mismatch: jax.Array, cfg: MCAMConfig) -> jax.Array:

@@ -40,6 +40,21 @@ class QuantSpec:
     clip_std: float = 2.5  # clip to mean +/- clip_std * std before scaling
 
 
+def affine_quantize(x: jax.Array, levels: int, lo, hi,
+                    round_fn=jnp.round) -> jax.Array:
+    """THE quantizer: clip to [lo, hi], scale to [0, levels), round, clamp.
+
+    This single function is shared by training and serving --
+    `fake_quant` calls it with `round_fn=ste_round` (STE gradients), and
+    `MemoryStore.write` / `quantize_queries` call it with the default
+    hard round. Both produce the SAME forward values bit-for-bit, which
+    is one leg of the train/serve parity contract
+    (tests/test_train_serve_parity.py)."""
+    scale = (levels - 1) / (hi - lo)
+    q = round_fn((jnp.clip(x, lo, hi) - lo) * scale)
+    return jnp.clip(q, 0, levels - 1)
+
+
 def clip_range(x: jax.Array, clip_std: float) -> tuple[jax.Array, jax.Array]:
     """Std-determined clip range, computed batch-wide and detached (the range
     is a calibration statistic, not a learnable path). Clamped to the actual
@@ -63,19 +78,22 @@ def fake_quant(x: jax.Array, spec: QuantSpec,
     """
     lo, hi = clip_range(x, spec.clip_std) if rng_range is None else rng_range
     scale = (spec.levels - 1) / (hi - lo)
-    xc = jnp.clip(x, lo, hi)
-    q = ste_round((xc - lo) * scale)
-    q = jnp.clip(q, 0, spec.levels - 1)
+    q = affine_quantize(x, spec.levels, lo, hi, round_fn=ste_round)
     return q, q / scale + lo, (lo, hi)
 
 
 def quantize_asymmetric(query: jax.Array, support: jax.Array,
                         support_levels: int, clip_std: float = 2.5,
-                        query_levels: int = 4):
+                        query_levels: int = 4,
+                        rng: tuple[jax.Array, jax.Array] | None = None):
     """Paper's asymmetric QAT: a SHARED clip range (from the support
     statistics, the stored distribution) but different level counts.
+    `rng` overrides the range (e.g. a MemoryStore's calibrated (lo, hi),
+    so the episodic training forward quantizes exactly like serving).
     Returns (q_query, q_support) integer-valued float arrays."""
-    rng = clip_range(jnp.concatenate([support.ravel(), query.ravel()]), clip_std)
+    if rng is None:
+        rng = clip_range(jnp.concatenate([support.ravel(), query.ravel()]),
+                         clip_std)
     qq, _, _ = fake_quant(query, QuantSpec(query_levels, clip_std), rng)
     qs, _, _ = fake_quant(support, QuantSpec(support_levels, clip_std), rng)
     return qq, qs

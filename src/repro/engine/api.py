@@ -57,6 +57,12 @@ class SearchRequest:
              threshold; results are bit-identical either way, so this is
              purely a performance knob (e.g. for applying a measured TPU
              dense-vs-fused crossover without a code change).
+    noisy:   per-request override of SearchConfig.noisy (None defers to
+             the config). noisy=False serves the NOISELESS hardware
+             forward on any mode/backend/sharding -- the serving side of
+             the train/serve parity contract: noiseless votes are
+             bit-identical to hardware-aware training's in-episode scores
+             (`RetrievalEngine.episode_votes`) on the same support set.
 
     >>> SearchRequest(mode="ideal", k=8).mode
     'ideal'
@@ -74,6 +80,7 @@ class SearchRequest:
     backend: str = "auto"
     axes: tuple | None = None
     fused_min_rows: int | None = None
+    noisy: bool | None = None
 
     def __post_init__(self):
         if self.mode not in MODES:

@@ -32,10 +32,30 @@ import jax.numpy as jnp
 
 from repro.core import avss as avss_lib
 from repro.core import encodings as enc_lib
+from repro.core import mcam as mcam_lib
+from repro.core import quantization as quant_lib
 from repro.core.avss import SearchConfig
 from repro.engine.api import SearchRequest, SearchResult
 from repro.engine.backends import resolve_backend
 from repro.kernels import ref as ref_kernels
+
+
+def _noise_stream(key) -> jax.Array | None:
+    """Fold a PRNG key (typed or legacy uint32), array or int into one
+    uint32 noise-stream coordinate for the counter-based hardware noise.
+    None passes through -- the stream-less coordinates are EXACTLY the
+    serving ones, so episode_votes(key=None) is bit-identical to the
+    noisy `full` search."""
+    if key is None:
+        return None
+    if isinstance(key, jax.Array) and jnp.issubdtype(key.dtype,
+                                                    jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    arr = jnp.atleast_1d(jnp.asarray(key)).astype(jnp.uint32).ravel()
+    s = jnp.uint32(0x9E3779B9)
+    for i in range(arr.shape[0]):
+        s = mcam_lib._mix(s ^ arr[i])
+    return s
 
 # Default row threshold above which shortlists (the `ideal` mode and the
 # two-phase phase 1 -- unsharded, or PER SHARD-LOCAL BLOCK when sharded)
@@ -71,22 +91,37 @@ class RetrievalEngine:
     def resolved_backend(self) -> str:
         return resolve_backend(self.backend, self.cfg.use_kernel)
 
-    def with_backend(self, backend: str) -> "RetrievalEngine":
-        """Engine with a per-request backend override, cached per instance:
-        a hot decode loop that sets `SearchRequest.backend` gets the SAME
-        engine object back on every call -- no rebuild, and closures keyed
-        on the engine (jit caches) keep hitting."""
-        if backend in ("auto", self.backend):
-            return self
+    def _cached_replace(self, key, **changes) -> "RetrievalEngine":
+        """dataclasses.replace cached per instance: per-request overrides
+        return the SAME engine object on every call -- no rebuild, and
+        closures keyed on the engine (jit caches) keep hitting."""
         cache = self.__dict__.get("_backend_cache")
         if cache is None:
             cache = {}
             object.__setattr__(self, "_backend_cache", cache)
-        eng = cache.get(backend)
+        eng = cache.get(key)
         if eng is None:
-            eng = dataclasses.replace(self, backend=backend)
-            cache[backend] = eng
+            eng = dataclasses.replace(self, **changes)
+            cache[key] = eng
         return eng
+
+    def with_backend(self, backend: str) -> "RetrievalEngine":
+        """Engine with a per-request backend override (cached, see
+        `_cached_replace`); 'auto' and the current backend return self."""
+        if backend in ("auto", self.backend):
+            return self
+        return self._cached_replace(backend, backend=backend)
+
+    def with_noisy(self, noisy: bool | None) -> "RetrievalEngine":
+        """Engine whose SearchConfig has `noisy` overridden (cached); None
+        and the current setting return self. This is what threads
+        `SearchRequest.noisy` through every mode/backend/sharding -- e.g.
+        serving a noiseless forward for a train/serve parity check without
+        rebuilding configs."""
+        if noisy is None or noisy == self.cfg.noisy:
+            return self
+        return self._cached_replace(
+            ("noisy", noisy), cfg=dataclasses.replace(self.cfg, noisy=noisy))
 
     def _fused_threshold(self, request: SearchRequest | None = None) -> int:
         """Effective fused-shortlist row threshold: the request override
@@ -128,7 +163,7 @@ class RetrievalEngine:
         [8]
         """
         req = request if request is not None else SearchRequest()
-        eng = self.with_backend(req.backend)
+        eng = self.with_backend(req.backend).with_noisy(req.noisy)
         q = store.quantize_queries(queries)
         valid = store.valid
         iters = eng._iterations(q.shape[-1])
@@ -203,6 +238,100 @@ class RetrievalEngine:
         labels = store.labels[idx]
         votes = jnp.where(labels >= 0, -dist, -jnp.inf)
         return SearchResult(votes, dist, idx, labels, iters)
+
+    # -- differentiable episodic forward (hardware-aware training) ---------
+
+    def episode_votes(self, q_emb: jax.Array, s_emb: jax.Array, *,
+                      clip_std: float = 2.5, sa_tau: float = 0.02,
+                      key=None, noisy: bool | None = None,
+                      rng_range=None) -> dict[str, jax.Array]:
+        """Differentiable end-to-end MCAM forward on FLOAT embeddings.
+
+        This is the training twin of `search(mode='full')`: asymmetric
+        STE fake-quant, STE word encoding, the write-time string layout,
+        and the `votes_from_mismatch` physics -- the SAME shared functions
+        the serving path traces, with the straight-through estimators
+        (`quantization.ste_round`, `encodings.encode_words_ste`,
+        `mcam.ste_step`) wrapped AROUND them rather than re-implemented.
+        Consequence (the train/serve parity contract,
+        tests/test_train_serve_parity.py): given the same embeddings and
+        quantization range, the returned votes/dist are BIT-IDENTICAL to
+        `search` on a store programmed with the same supports -- noiseless,
+        and even noisy when `key=None` (the counter-based noise then uses
+        exactly the serving coordinates).
+
+        q_emb (B, dim), s_emb (N, dim): float controller outputs.
+        clip_std:  std-clipping for the shared quantization range.
+        sa_tau:    sigmoid-STE temperature of the sense-amp step.
+        key:       optional PRNG key / int folded into an extra noise-
+                   stream coordinate (fresh hardware noise per train step);
+                   None reproduces the serving noise exactly.
+        noisy:     overrides cfg.noisy when not None.
+        rng_range: optional explicit (lo, hi) quantization range, e.g. a
+                   MemoryStore's calibrated range.
+        Returns {votes (B, N), dist (B, N), iterations}.
+
+        >>> import jax, jax.numpy as jnp
+        >>> from repro.core.avss import SearchConfig
+        >>> from repro.core.memory import MemoryConfig
+        >>> from repro.engine import (MemoryStore, RetrievalEngine,
+        ...                           SearchRequest)
+        >>> cfg = SearchConfig("mtmc", cl=4, mode="avss", use_kernel="ref")
+        >>> eng = RetrievalEngine(cfg)
+        >>> s = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(0), (6, 8)))
+        >>> q = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (3, 8)))
+        >>> votes = eng.episode_votes(q, s, noisy=False)["votes"]
+        >>> store = MemoryStore.create(
+        ...     MemoryConfig(capacity=6, dim=8, search=cfg)
+        ... ).calibrate(jnp.concatenate([s.ravel(), q.ravel()]))
+        >>> store = store.write(s, jnp.arange(6))
+        >>> res = eng.search(store, q, SearchRequest(mode="full",
+        ...                                          noisy=False))
+        >>> bool(jnp.array_equal(votes, res.votes))   # train == serve
+        True
+        """
+        cfg = self.cfg
+        enc = cfg.enc
+        sl = cfg.mcam.string_len
+        if cfg.mode == "avss":
+            q, v = quant_lib.quantize_asymmetric(
+                q_emb, s_emb, enc.levels, clip_std, 4, rng=rng_range)
+        else:
+            v, _, rng = quant_lib.fake_quant(
+                s_emb, quant_lib.QuantSpec(enc.levels, clip_std), rng_range)
+            q, _, _ = quant_lib.fake_quant(
+                q_emb, quant_lib.QuantSpec(enc.levels, clip_std), rng)
+        s_grid = avss_lib.layout_support_words(
+            enc_lib.encode_words_ste(v, enc), sl)          # (N, seg, L, sl)
+        if cfg.mode == "avss":
+            q_grid = avss_lib.layout_query(q, enc, "avss", sl)
+        else:
+            q_grid = avss_lib.layout_support_words(
+                enc_lib.encode_words_ste(q, enc), sl)
+        mm = jnp.abs(q_grid[:, None] - s_grid[None])   # (B, N, seg, L, sl)
+        qidx = jnp.arange(q_emb.shape[0],
+                          dtype=jnp.uint32)[:, None, None, None]
+        votes, dist = avss_lib.votes_from_mismatch(
+            mm, qidx, enc.weights_array(), cfg,
+            jnp.asarray(cfg.mcam.thresholds()), noisy=noisy,
+            noise_stream=_noise_stream(key),
+            step_fn=lambda x: mcam_lib.ste_step(x, sa_tau))
+        return {"votes": votes, "dist": dist,
+                "iterations": self._iterations(q_emb.shape[-1])}
+
+    def episode_scores(self, q_emb: jax.Array, s_emb: jax.Array,
+                       s_labels: jax.Array, n_classes: int, *,
+                       clip_std: float = 2.5, sa_tau: float = 0.02,
+                       key=None, noisy: bool | None = None,
+                       rng_range=None) -> jax.Array:
+        """Per-class episodic logits (B, n_classes): `episode_votes`
+        aggregated by `avss.class_mean_votes` -- the head HAT's CE loss
+        trains and the served evaluation reuses (examples/fsl_omniglot.py,
+        launch/train.py --hat)."""
+        votes = self.episode_votes(
+            q_emb, s_emb, clip_std=clip_std, sa_tau=sa_tau, key=key,
+            noisy=noisy, rng_range=rng_range)["votes"]
+        return avss_lib.class_mean_votes(votes, s_labels, n_classes)
 
     # -- phase-0 helpers ---------------------------------------------------
 

@@ -48,14 +48,15 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core import avss as avss_lib
+from repro.core import quantization as quant_lib
 from repro.core.memory import MemoryConfig
 from repro.kernels import ops as kernel_ops
 
 
 def _quantize(x: jax.Array, levels: int, lo, hi) -> jax.Array:
-    scale = (levels - 1) / (hi - lo)
-    q = jnp.round((jnp.clip(x, lo, hi) - lo) * scale)
-    return jnp.clip(q, 0, levels - 1).astype(jnp.int32)
+    # the SAME affine quantizer hardware-aware training fake-quants with
+    # (there with an STE round) -- one leg of the train/serve parity
+    return quant_lib.affine_quantize(x, levels, lo, hi).astype(jnp.int32)
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -153,6 +154,26 @@ class MemoryStore:
         )
 
     @classmethod
+    def from_episode(cls, s_emb: jax.Array, q_emb: jax.Array,
+                     labels: jax.Array, search_cfg,
+                     clip_std: float = 2.5,
+                     capacity: int | None = None) -> "MemoryStore":
+        """Program an episode's FLOAT support embeddings the way the
+        hardware-aware trainer quantized them: calibrated on the SAME
+        support+query sample statistics `quantize_asymmetric` saw. This is
+        the one train->write->serve recipe -- searches on the returned
+        store are bit-identical to the in-training episodic forward
+        (`RetrievalEngine.episode_votes`; tests/test_train_serve_parity.py)
+        -- shared by `launch/train.py --hat`, examples/fsl_omniglot.py and
+        the parity tests so the calibration convention cannot drift."""
+        cfg = MemoryConfig(capacity=capacity or s_emb.shape[0],
+                           dim=s_emb.shape[1], search=search_cfg,
+                           clip_std=clip_std)
+        sample = jnp.concatenate([s_emb.ravel(), q_emb.ravel()])
+        return cls.create(cfg).calibrate(sample).write(
+            s_emb, labels.astype(jnp.int32))
+
+    @classmethod
     def from_state(cls, state: dict, cfg: MemoryConfig) -> "MemoryStore":
         """Adopt a legacy `core.memory` state dict (pre-redesign contract).
         Dicts from old checkpoints may lack the write-time `s_grid`; it is
@@ -174,6 +195,31 @@ class MemoryStore:
         return {"values": self.values, "proj": self.proj,
                 "s_grid": self.s_grid, "labels": self.labels,
                 "size": self.size, "lo": self.lo, "hi": self.hi}
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, directory: str, step: int = 0) -> None:
+        """Persist the programmed store through `repro.checkpoint.ckpt`
+        (atomic, sharded, manifest-last): values, labels, the write-time
+        proj/s_grid layouts, the calibrated quant range and the ring size
+        -- everything a separate serving process needs to `restore` and
+        search bit-identically. A sharded store writes its addressable
+        shards; restore rebuilds the global arrays (re-`shard` after)."""
+        from repro.checkpoint import ckpt
+        ckpt.save(directory, step, self._unpad().to_state())
+
+    @classmethod
+    def restore(cls, directory: str, cfg: MemoryConfig,
+                step: int | None = None) -> "MemoryStore":
+        """Load a store previously written by `save`. The result is
+        unsharded (call `.shard(mesh, axes)` to place it) and marked
+        calibrated -- the persisted (lo, hi) range IS the calibration, so
+        searches on the restored store are bit-identical to the writer's
+        (round-trip asserted in tests/test_checkpoint.py)."""
+        from repro.checkpoint import ckpt
+        target = jax.eval_shape(lambda: cls.create(cfg).to_state())
+        return cls.from_state(ckpt.restore(directory, target, step=step),
+                              cfg)
 
     # -- derived properties --------------------------------------------------
 
@@ -215,9 +261,10 @@ class MemoryStore:
                 f"were produced under the previous range and would become "
                 f"inconsistent with the new one. Calibrate before the first "
                 f"write (or build a fresh store and re-program it).")
-        mu, sd = vectors.mean(), vectors.std() + 1e-8
-        lo = jnp.maximum(mu - self.cfg.clip_std * sd, vectors.min())
-        hi = jnp.minimum(mu + self.cfg.clip_std * sd, vectors.max() + 1e-8)
+        # the SAME std-clipped range hardware-aware training computes
+        # (quantization.clip_range): calibrating on the sample the trainer
+        # quantized over reproduces its range bit-for-bit
+        lo, hi = quant_lib.clip_range(vectors, self.cfg.clip_std)
         return dataclasses.replace(self, lo=lo, hi=hi, calibrated=True)
 
     def write(self, vectors: jax.Array, labels: jax.Array) -> "MemoryStore":

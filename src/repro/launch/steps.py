@@ -302,6 +302,94 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, rules: Rules,
     return train_step, optimizer
 
 
+def make_hat_train_steps(apply_fn, hat_cfg, pre_optimizer,
+                         meta_optimizer=None, *, n_way: int,
+                         mesh=None, data_axes=("data",)):
+    """Two-stage hardware-aware trainer steps (paper Sec. 3.3).
+
+    Stage 1 (`pretrain_step`): controller + linear head, plain CE over the
+    full training class set. Stage 2 (`meta_step`): episodic CE THROUGH the
+    simulated MCAM -- `repro.core.hat.meta_loss`, whose forward is the
+    engine's own differentiable episodic path
+    (`RetrievalEngine.episode_votes`), so the trained controller serves
+    bit-identically through `MemoryStore` + `engine.search`.
+
+    Data parallelism follows the launch-layer idiom (same as
+    `make_train_step`): the steps are jitted and the returned `place(tree)`
+    helper row-shards batch/episode leaves over the mesh's `data_axes`
+    (leading dim divisible by the shard count; everything else, params
+    included, replicates) -- the partitioner then runs the embedding
+    forward data-parallel and the episodic quantization statistics as
+    global collectives, with unchanged semantics.
+
+    apply_fn:       (backbone_params, images) -> embeddings.
+    hat_cfg:        repro.core.hat.HATConfig.
+    pre_optimizer / meta_optimizer: (init, update) optimizers from
+                    repro.optim; meta defaults to the pretrain one.
+    n_way:          episode way count (static: kept out of the traced tree).
+    Returns (pretrain_step, meta_step, place).
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.core.avss import SearchConfig
+    >>> from repro.core.hat import HATConfig
+    >>> from repro.launch.steps import make_hat_train_steps
+    >>> from repro.optim import adamw
+    >>> hat = HATConfig(search=SearchConfig("mtmc", cl=2, mode="avss",
+    ...                                     use_kernel="ref"))
+    >>> apply_fn = lambda p, x: jax.nn.relu(x @ p["w"])
+    >>> opt = adamw(1e-2)
+    >>> pre, meta, place = make_hat_train_steps(apply_fn, hat, opt, n_way=2)
+    >>> params = {"backbone": {"w": jnp.eye(4)}}
+    >>> ep = {"support_images": jnp.eye(4),
+    ...       "support_labels": jnp.array([0, 1, 0, 1]),
+    ...       "query_images": jnp.eye(4)[:2],
+    ...       "query_labels": jnp.array([0, 1])}
+    >>> p2, s2, loss = meta(params, opt.init(params), place(ep),
+    ...                     jax.random.PRNGKey(0))
+    >>> bool(jnp.isfinite(loss))
+    True
+    """
+    from repro.core import hat as hat_lib
+    if meta_optimizer is None:
+        meta_optimizer = pre_optimizer
+
+    def _apply(params, opt_state, grads, optimizer):
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
+        return params, opt_state
+
+    @jax.jit
+    def pretrain_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(hat_lib.pretrain_loss)(
+            params, batch, apply_fn)
+        params, opt_state = _apply(params, opt_state, grads, pre_optimizer)
+        return params, opt_state, loss
+
+    @jax.jit
+    def meta_step(params, opt_state, ep_arrays, key):
+        episode = {**ep_arrays, "n_way": n_way}      # n_way stays static
+        loss, grads = jax.value_and_grad(hat_lib.meta_loss)(
+            params, episode, apply_fn, hat_cfg, key)
+        params, opt_state = _apply(params, opt_state, grads, meta_optimizer)
+        return params, opt_state, loss
+
+    def place(tree):
+        """Row-shard batch leaves over the data axes; replicate the rest."""
+        if mesh is None:
+            return tree
+        shards = int(np.prod([mesh.shape[a] for a in data_axes]))
+        row = NamedSharding(mesh, P(data_axes))
+        rep = NamedSharding(mesh, P())
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_put(
+                jnp.asarray(x),
+                row if (jnp.ndim(x) and jnp.shape(x)[0] % shards == 0)
+                else rep),
+            tree)
+
+    return pretrain_step, meta_step, place
+
+
 def make_prefill_step(cfg: ModelConfig, rules: Rules):
     def prefill_step(params, batch):
         logits, aux, caches = tfm.forward(params, cfg, batch, rules,

@@ -91,3 +91,62 @@ def test_missing_leaf_raises(tmp_path):
     save(str(tmp_path), 1, {"a": jnp.ones((3,))})
     with pytest.raises(KeyError):
         restore(str(tmp_path), {"b": jax.ShapeDtypeStruct((3,), jnp.float32)})
+
+
+# ---------------------------------------------------------------------------
+# MemoryStore persistence (ISSUE 5 satellite): a trained-and-written store
+# round-trips through checkpoint/ckpt.py bit-identically, so a separate
+# serving process can restore and search it.
+# ---------------------------------------------------------------------------
+
+
+def _programmed_store():
+    from repro.core.avss import SearchConfig
+    from repro.core.memory import MemoryConfig
+    from repro.engine import MemoryStore
+    cfg = MemoryConfig(capacity=12, dim=6,
+                       search=SearchConfig("mtmc", cl=4, mode="avss",
+                                           use_kernel="ref"))
+    vecs = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(0), (9, 6)))
+    labels = jnp.arange(9, dtype=jnp.int32) % 3
+    store = MemoryStore.create(cfg).calibrate(vecs).write(vecs, labels)
+    return cfg, vecs, store
+
+
+def test_memory_store_save_restore_bit_parity(tmp_path):
+    """Every persisted field (values/labels/proj/s_grid/lo/hi/size) round-
+    trips exactly, the restored store is marked calibrated, and searches on
+    it are bit-identical to the writer's store."""
+    from repro.engine import MemoryStore, RetrievalEngine, SearchRequest
+    cfg, vecs, store = _programmed_store()
+    store.save(str(tmp_path), step=5)
+    restored = MemoryStore.restore(str(tmp_path), cfg)
+    for field in ("values", "proj", "s_grid", "labels", "size", "lo", "hi"):
+        a, b = getattr(store, field), getattr(restored, field)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=field)
+        assert a.dtype == b.dtype, field
+    assert restored.calibrated and int(restored.size) == 9
+    # a float query exercises the restored calibration range end-to-end
+    eng = RetrievalEngine(cfg.search)
+    req = SearchRequest(mode="two_phase", k=6)
+    want = eng.search(store, vecs[:4], req)
+    got = eng.search(restored, vecs[:4], req)
+    for field in ("votes", "dist", "indices", "labels"):
+        np.testing.assert_array_equal(np.asarray(getattr(want, field)),
+                                      np.asarray(getattr(got, field)),
+                                      err_msg=field)
+
+
+def test_memory_store_restore_is_calibrated_and_writable(tmp_path):
+    """A restored store IS calibrated (the persisted range is the
+    calibration): writing more supports to it works without re-calibrating,
+    and the ring position continues from the persisted size."""
+    from repro.engine import MemoryStore
+    cfg, vecs, store = _programmed_store()
+    store.save(str(tmp_path))
+    restored = MemoryStore.restore(str(tmp_path), cfg)
+    more = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (2, 6)))
+    grown = restored.write(more, jnp.array([5, 6], jnp.int32))
+    assert int(grown.size) == 11
+    np.testing.assert_array_equal(np.asarray(grown.labels[9:11]), [5, 6])

@@ -3,8 +3,9 @@
 Two checks keep the new docs surface from rotting:
 
 * doctests on the public API (`engine/api.py`, `engine/store.py`,
-  `engine/engine.py`, `kernels/shortlist.py`) -- the same modules CI also
-  runs through `pytest --doctest-modules`;
+  `engine/engine.py`, `kernels/shortlist.py`, and since ISSUE 5 the
+  trainer surface `core/hat.py` + `launch/steps.py`) -- the same modules
+  CI also runs through `pytest --doctest-modules`;
 * extract-and-run over every ```python block in README.md and docs/*.md
   (blocks in one file share a namespace, so a later block may build on an
   earlier one; shell examples use ```bash fences and are not executed).
@@ -19,7 +20,8 @@ import pytest
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 PUBLIC_MODULES = ("repro.engine.api", "repro.engine.store",
-                  "repro.engine.engine", "repro.kernels.shortlist")
+                  "repro.engine.engine", "repro.kernels.shortlist",
+                  "repro.core.hat", "repro.launch.steps")
 
 
 @pytest.mark.parametrize("modname", PUBLIC_MODULES)
