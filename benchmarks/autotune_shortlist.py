@@ -1,0 +1,134 @@
+"""Autotune the fused shortlist: sweep (tile_b, tile_n, k_pad), find the
+dense-vs-fused crossover, and emit the measured `fused_min_rows` setting.
+
+    PYTHONPATH=src python -m benchmarks.autotune_shortlist [--dry-run]
+
+For each support count N the harness times the dense reference (the full
+(B, N) distance matrix + lax.top_k -- the exact computation the engine's
+`ideal` route runs below the fused threshold) against the fused Pallas
+shortlist (kernels/shortlist.py) over a grid of tiling knobs, always with
+the store's bit-packed projection operand (MemoryStore.proj_packed -- the
+configuration the engine actually serves). Every timed variant is also
+checked bit-exact against the dense reference, so a tile-shape regression
+fails the run (the fast CI job runs `--dry-run` on every push).
+
+The crossover -- the smallest swept N whose best fused config is at least
+as fast as dense -- is written to `results/autotune_shortlist.json` as
+`fused_min_rows`. Applying it needs no code change: the knob is already
+plumbed end to end (`RetrievalEngine(fused_min_rows=...)`,
+`SearchRequest.fused_min_rows`, `serve --retrieval-fused-min-rows`).
+
+Measurement mode note: on this CPU container the fused rows time the
+Pallas INTERPRETER (interpret=True is the kernel's CPU default), which is
+also how the committed BENCH_shortlist.json baseline was measured; re-run
+on real TPU hardware to tune for HBM. k_pad only affects the bitonic
+network path (compiled TPU); under interpret the native path ignores it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_us
+from repro.core.encodings import make_encoding
+from repro.kernels import ops as kernel_ops
+from repro.kernels.shortlist import lut_shortlist_pallas
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(ROOT, "results", "autotune_shortlist.json")
+
+FULL = dict(ns=(1024, 2048, 4096, 8192), tile_bs=(8, 16),
+            tile_ns=(256, 512, 1024), k_pads=(128, 256),
+            B=16, D=48, k=64, iters=3)
+DRY = dict(ns=(512,), tile_bs=(8,), tile_ns=(256,), k_pads=(128,),
+           B=4, D=16, k=16, iters=1)
+
+
+def _dense(q1h, proj, k):
+    dist = q1h.astype(jnp.float32) @ proj.astype(jnp.float32).T
+    neg, idx = jax.lax.top_k(-dist, k)
+    return -neg, idx
+
+
+def sweep(ns, tile_bs, tile_ns, k_pads, B, D, k, iters):
+    enc = make_encoding("mtmc", 8)
+    bits = kernel_ops.projection_pack_bits(enc, jnp.bfloat16)
+    rows, crossover = [], None
+    for n in ns:
+        sv = jax.random.randint(jax.random.PRNGKey(n), (n, D), 0, enc.levels)
+        qv = jax.random.randint(jax.random.PRNGKey(n + 1), (B, D), 0, 4)
+        q1h = kernel_ops.query_onehot(qv, jnp.bfloat16)
+        proj = kernel_ops.support_projection(sv, enc, jnp.bfloat16)
+        packed = kernel_ops.pack_projection(proj, enc)
+        us_dense, ref = time_us(
+            jax.jit(lambda q, p: _dense(q, p, k)), q1h, proj, iters=iters)
+        rows.append({"n": n, "config": "dense", "us": us_dense})
+        print(f"N={n:5d} dense                         {us_dense:9.0f}us")
+        best = None
+        # ("default",) = the kernel's adaptive interpret tiling -- what an
+        # untuned engine run actually executes
+        configs = [("default",)] + list(
+            itertools.product(tile_bs, tile_ns, k_pads))
+        for cfgt in configs:
+            kw = {} if cfgt == ("default",) else dict(
+                tile_b=cfgt[0], tile_n=cfgt[1], k_pad=cfgt[2])
+            f = jax.jit(lambda q, p, kw=kw: lut_shortlist_pallas(
+                q, None, k, packed=p, pack_bits=bits, **kw))
+            us, out = time_us(f, q1h, packed, iters=iters)
+            for a, b in zip(out, ref):   # bit-parity gate on every config
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"fused != dense at N={n}, config={cfgt}")
+            label = "default" if cfgt == ("default",) else \
+                f"tb={cfgt[0]},tn={cfgt[1]},kp={cfgt[2]}"
+            rows.append({"n": n, "config": label, "us": us,
+                         "speedup_vs_dense": us_dense / us})
+            print(f"N={n:5d} fused {label:23s} {us:9.0f}us "
+                  f"({us_dense / us:.2f}x dense)")
+            if best is None or us < best[1]:
+                best = (label, us)
+        if crossover is None and best[1] <= us_dense:
+            crossover = n
+    return rows, crossover
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny sweep (CI parity/regression gate)")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    params = DRY if args.dry_run else FULL
+    rows, crossover = sweep(**params)
+    out = {
+        "generated_by": "benchmarks.autotune_shortlist"
+                        + (" --dry-run" if args.dry_run else ""),
+        "backend": jax.default_backend(),
+        "measurement": "pallas-interpret"
+                       if jax.default_backend() == "cpu" else "compiled",
+        "params": {k: v for k, v in params.items()},
+        "fused_min_rows": crossover,
+        "rows": rows,
+    }
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"# wrote {os.path.relpath(args.out, ROOT)}")
+    if crossover is not None:
+        print(f"# measured dense-vs-fused crossover: N={crossover} -- apply "
+              f"with --retrieval-fused-min-rows {crossover} (or "
+              f"RetrievalEngine(fused_min_rows={crossover}))")
+    else:
+        print("# fused never beat dense in this sweep; keep the dense path "
+              "(fused_min_rows large) or re-run on real hardware")
+
+
+if __name__ == "__main__":
+    main()

@@ -181,6 +181,7 @@ class RetrievalEngine:
                     q, store.values, eng.cfg, store.mesh, axes=axes,
                     k=req.k, valid=valid, labels=store.labels,
                     s_grid=store.s_grid, proj=store.proj,
+                    packed=store.proj_packed,
                     backend=backend, fused_min_rows=fmr)
                 # labels come from the per-shard fold (-1 on empty/pad
                 # rows): mask their votes without any global gather
@@ -193,7 +194,8 @@ class RetrievalEngine:
             q1h = kernel_ops.query_onehot(q, jnp.float32)
             res = sharded.sharded_ideal_search(
                 q1h, store.proj, store.labels, store.mesh, axes=axes,
-                k=req.k, backend=backend, fused_min_rows=fmr)
+                k=req.k, backend=backend, fused_min_rows=fmr,
+                packed=store.proj_packed, enc=eng.cfg.enc)
             votes = jnp.where(res["labels"] >= 0, res["votes"], -jnp.inf)
             return SearchResult(votes, res["dist"], res["indices"],
                                 res["labels"], iters)
@@ -209,6 +211,7 @@ class RetrievalEngine:
         if req.mode == "two_phase":
             res = eng.two_phase(q, store.values, k=req.k, valid=valid,
                                 s_grid=store.s_grid, proj=store.proj,
+                                packed=store.proj_packed,
                                 fused_min_rows=eng._fused_threshold(req))
             labels = store.labels[res["indices"]]      # -1 on empty slots
             votes = jnp.where(labels >= 0, res["votes"], -jnp.inf)
@@ -228,7 +231,7 @@ class RetrievalEngine:
                                  or backend == "fused"):
             dist, idx = kernel_ops.lut_shortlist(
                 q, store.values, eng.cfg.enc, k, valid=valid,
-                proj=store.proj)
+                proj=store.proj, packed=store.proj_packed)
         else:
             # same dense block shortlist the sharded paths use per shard
             from repro.engine.sharded import _local_shortlist
@@ -385,6 +388,7 @@ class RetrievalEngine:
     def shortlist(self, q_values: jax.Array, s_values: jax.Array, k: int,
                   valid: jax.Array | None = None,
                   proj: jax.Array | None = None,
+                  packed: jax.Array | None = None,
                   fused_min_rows: int | None = None
                   ) -> tuple[jax.Array, jax.Array]:
         """Top-k supports by ideal digital AVSS distance.
@@ -404,6 +408,10 @@ class RetrievalEngine:
         out of the search. The ref backend always recomputes -- it is the
         readable reference, and its distances are bit-identical anyway.
 
+        packed: optional bit-packed projection (MemoryStore.proj_packed);
+        the fused kernel then streams the 4-8x smaller int32 operand
+        instead of `proj`, bit-identically (kernels/shortlist.py).
+
         Dispatch mirrors every other shortlist site: the fused Pallas
         kernel engages on the 'fused' backend, and on any kernel backend
         once N reaches the fused threshold (`fused_min_rows`, overridable
@@ -419,7 +427,8 @@ class RetrievalEngine:
         if backend == "fused" or (backend != "ref"
                                   and s_values.shape[0] >= fused_min_rows):
             return kernel_ops.lut_shortlist(q_values, s_values, cfg.enc, k,
-                                            valid=valid, proj=proj)
+                                            valid=valid, proj=proj,
+                                            packed=packed)
         if backend == "ref":
             lut = jnp.asarray(enc_lib.avss_sum_lut(cfg.enc), jnp.float32)
             dist = ref_kernels.avss_dist_ref(q_values, s_values, lut)
@@ -438,6 +447,7 @@ class RetrievalEngine:
                   k: int = 64, valid: jax.Array | None = None, *,
                   s_grid: jax.Array | None = None,
                   proj: jax.Array | None = None,
+                  packed: jax.Array | None = None,
                   fused_min_rows: int | None = None
                   ) -> dict[str, jax.Array]:
         """Shortlist + exact noisy rescore (beyond-paper TPU pipeline).
@@ -454,7 +464,8 @@ class RetrievalEngine:
         from repro.kernels import ops as kernel_ops
         cfg = self.cfg
         dist, idx = self.shortlist(q_values, s_values, k, valid=valid,
-                                   proj=proj, fused_min_rows=fused_min_rows)
+                                   proj=proj, packed=packed,
+                                   fused_min_rows=fused_min_rows)
         q_grid, s_grid, weights, thresholds = self._grids(q_values, s_values,
                                                           s_grid)
         votes = kernel_ops.rescore_shortlist(

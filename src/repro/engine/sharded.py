@@ -3,12 +3,17 @@
 Two flavours:
 
   sharded_two_phase_search   per-shard shortlist + exact noisy rescore,
-                             then all-gather + global top-k merge (candidate
-                             labels folded into the gather from per-shard
-                             lookups). Votes are BIT-IDENTICAL to the
-                             single-device two-phase. Ragged stores arrive
-                             pre-padded by MemoryStore.shard (label -1 pad
-                             rows, masked by the phase-1 penalty).
+                             then an all-gather of the per-shard top-k
+                             (dist, index, label) TRIPLET only + global
+                             top-k merge; the merged candidates' votes are
+                             recovered with one (B, k) psum (each global
+                             row is owned by exactly one shard, so the
+                             ownership-masked partial sums are exact --
+                             no vote tensor ever rides the all-gather).
+                             Votes are BIT-IDENTICAL to the single-device
+                             two-phase. Ragged stores arrive pre-padded by
+                             MemoryStore.shard (label -1 pad rows, masked
+                             by the phase-1 penalty).
   sharded_ideal_search       ideal-digital-distance only (the cheap serving
                              path formerly inlined in core/memory.py).
 
@@ -77,15 +82,22 @@ def _use_fused(backend: str, rows_loc: int, fused_min_rows) -> bool:
             and rows_loc >= fused_min_rows)
 
 
-def _local_shortlist(q1h, proj_loc, valid_loc, k_loc, *, fused: bool
+def _local_shortlist(q1h, proj_loc, valid_loc, k_loc, *, fused: bool,
+                     packed=None, pack_bits=None
                      ) -> tuple[jax.Array, jax.Array]:
     """Block shortlist shared by every dispatch site (per shard inside the
     shard_map bodies here, and the unsharded dense `ideal` route in
     engine.py): top-k_loc of the rows by exact integer LUT distance
     (+ native mask penalty), fused or dense -- bit-identical either way
-    (the kernel reproduces lax.top_k's (distance, row) order)."""
+    (the kernel reproduces lax.top_k's (distance, row) order). When the
+    store provides its bit-packed projection (`packed`/`pack_bits`), the
+    fused kernel streams that 4-8x smaller operand instead of proj_loc."""
     if fused:
         from repro.kernels import shortlist as shortlist_kernel
+        if packed is not None:
+            return shortlist_kernel.lut_shortlist_pallas(
+                q1h, None, k_loc, valid=valid_loc, packed=packed,
+                pack_bits=pack_bits)
         return shortlist_kernel.lut_shortlist_pallas(
             q1h, proj_loc, k_loc, valid=valid_loc)
     from repro.kernels import ops as kernel_ops
@@ -102,6 +114,7 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
                              labels: jax.Array | None = None,
                              s_grid: jax.Array | None = None,
                              proj: jax.Array | None = None,
+                             packed: jax.Array | None = None,
                              backend: str = "ref",
                              fused_min_rows: int | None = None
                              ) -> dict[str, jax.Array]:
@@ -120,6 +133,9 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
     MemoryStore.s_grid); omitted -> each shard lays out its rows here.
     proj: optional (N, 4d) write-time LUT projection (row-sharded,
     MemoryStore.proj); omitted -> each shard projects its rows here.
+    packed: optional bit-packed projection (row-sharded,
+    MemoryStore.proj_packed); the fused per-shard shortlist then streams
+    this 4-8x smaller operand instead of proj, bit-identically.
     backend / fused_min_rows: per-shard shortlist dispatch (see
     `_use_fused`); the default (ref, None) keeps the dense local matmul.
     Returns {votes (B, k), dist (B, k), indices (B, k) global rows
@@ -165,21 +181,31 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
     if proj is not None:
         extras.append(proj)
         extra_specs.append(P(axes))
+    if packed is not None:
+        extras.append(packed)
+        extra_specs.append(P(axes))
+        pack_bits = kernel_ops.projection_pack_bits(
+            enc, proj.dtype if proj is not None else jnp.bfloat16)
+    else:
+        pack_bits = None
+    ax = axes[0] if len(axes) == 1 else tuple(axes)
 
     def local(q1h_, q_grid_, s_loc, valid_loc, *rest):
         rest = list(rest)
         labels_loc = rest.pop(0) if labels is not None else None
         s_grid_loc = rest.pop(0) if s_grid is not None else None
         proj_loc = rest.pop(0) if proj is not None else None
+        packed_loc = rest.pop(0) if packed is not None else None
         offset = _shard_index(mesh, axes) * jnp.int32(s_loc.shape[0])
         # phase 1 on local rows: exact integer-valued distances, fused
         # kernel or dense MXU matmul (same LUT projection as
         # kernels/ops.support_projection, materialised at write time when
-        # the store provides `proj`)
+        # the store provides `proj` / its bit-packed `packed` twin)
         if proj_loc is None:
             proj_loc = lut.T[s_loc].reshape(s_loc.shape[0], -1)  # (N_loc, 4d)
         d_loc, idx_loc = _local_shortlist(q1h_, proj_loc, valid_loc, k_loc,
-                                          fused=fused)
+                                          fused=fused, packed=packed_loc,
+                                          pack_bits=pack_bits)
         gidx = idx_loc + offset
         # phase 2 on local candidates, GLOBAL indices for the noise counters
         if s_grid_loc is None:                         # read-time layout
@@ -187,15 +213,23 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
         votes = kernel_ops.rescore_shortlist(
             q_grid_, s_grid_loc, idx_loc, weights, cfg, thresholds,
             noise_idx=gidx)
-        # merge: stable sort by distance == (distance, global row) order.
-        # Each shard contributes its candidates' LOCAL label lookups to the
-        # gather, so the merge output needs no post-hoc global label gather.
+        # merge: all-gather ONLY the per-shard (dist, global index[, label])
+        # triplet -- a stable sort by distance == (distance, global row)
+        # order selects the global top-k. Votes never ride the gather: each
+        # selected global row is owned by exactly one shard (shard offsets
+        # partition the index space, local candidates are distinct), so the
+        # ownership-masked partial sum holds that shard's rescored vote and
+        # zeros elsewhere, and one (B, k) psum recovers the merged votes
+        # exactly (adding f32 zeros is exact -- bit-parity preserved).
         d_all = _gather_candidates(d_loc, axes)
-        v_all = _gather_candidates(votes, axes)
         i_all = _gather_candidates(gidx, axes)
         order = jnp.argsort(d_all, axis=-1, stable=True)[:, :k]
         take = lambda x: jnp.take_along_axis(x, order, axis=1)
-        outs = (take(v_all), take(d_all), take(i_all))
+        d_k, i_k = take(d_all), take(i_all)
+        own = i_k[:, :, None] == gidx[:, None, :]         # (B, k, k_loc)
+        v_part = jnp.sum(jnp.where(own, votes[:, None, :], 0.0), axis=2)
+        v_k = jax.lax.psum(v_part, ax)
+        outs = (v_k, d_k, i_k)
         if labels_loc is not None:
             l_all = _gather_candidates(labels_loc[idx_loc], axes)
             outs = outs + (take(l_all),)
@@ -218,8 +252,9 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
 def sharded_ideal_search(q_onehot: jax.Array, proj: jax.Array,
                          labels: jax.Array, mesh, axes=("data",),
                          k: int = 16, backend: str = "ref",
-                         fused_min_rows: int | None = None
-                         ) -> dict[str, jax.Array]:
+                         fused_min_rows: int | None = None,
+                         packed: jax.Array | None = None,
+                         enc=None) -> dict[str, jax.Array]:
     """Ideal-digital-distance block search (no rescore; cheap serving path).
 
     q_onehot: (B, 4d) replicated query one-hots; proj: (N, 4d) row-sharded
@@ -231,6 +266,9 @@ def sharded_ideal_search(q_onehot: jax.Array, proj: jax.Array,
     backend / fused_min_rows: per-shard shortlist dispatch (see
     `_use_fused`); above the threshold each shard streams through the fused
     Pallas shortlist kernel instead of the dense (B, N_loc) local matmul.
+    packed / enc: optional bit-packed projection (row-sharded,
+    MemoryStore.proj_packed) and its encoding; the fused path then streams
+    the 4-8x smaller operand, bit-identically.
     Collective volume is O(B * k * shards), independent of capacity.
     Returns {dist, votes=-dist, labels, indices} each (B, k').
     """
@@ -238,12 +276,22 @@ def sharded_ideal_search(q_onehot: jax.Array, proj: jax.Array,
 
     rows_loc = proj.shape[0] // int(np.prod([mesh.shape[a] for a in axes]))
     fused = _use_fused(backend, rows_loc, fused_min_rows)
+    extras, extra_specs = [], []
+    if packed is not None and enc is not None:
+        from repro.kernels import ops as kernel_ops
+        extras.append(packed)
+        extra_specs.append(P(axes))
+        pack_bits = kernel_ops.projection_pack_bits(enc, proj.dtype)
+    else:
+        pack_bits = None
 
-    def local(qr, proj_loc, labels_loc):
+    def local(qr, proj_loc, labels_loc, *rest):
+        packed_loc = rest[0] if rest else None
         offset = _shard_index(mesh, axes) * jnp.int32(proj_loc.shape[0])
         kk = min(k, proj_loc.shape[0])
         d_loc, idx = _local_shortlist(qr, proj_loc, labels_loc >= 0, kk,
-                                      fused=fused)
+                                      fused=fused, packed=packed_loc,
+                                      pack_bits=pack_bits)
         d_all = _gather_candidates(d_loc, axes)
         l_all = _gather_candidates(labels_loc[idx], axes)
         i_all = _gather_candidates(idx + offset, axes)
@@ -253,9 +301,9 @@ def sharded_ideal_search(q_onehot: jax.Array, proj: jax.Array,
 
     dist, labels_out, indices = shard_map(
         local, mesh=mesh,
-        in_specs=(P(), P(axes), P(axes)),
+        in_specs=(P(), P(axes), P(axes), *extra_specs),
         out_specs=(P(), P(), P()),
         check_rep=False,
-    )(q_onehot, proj, labels)
+    )(q_onehot, proj, labels, *extras)
     return {"dist": dist, "labels": labels_out, "votes": -dist,
             "indices": indices}

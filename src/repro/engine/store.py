@@ -7,6 +7,10 @@ strings and searched many times: MTMC encoding happens at write time (Sec.
 
   values   (N, d)  int32   quantized support values (ring buffer)
   proj     (N, 4d) bf16    AVSS LUT projection (phase-1 MXU shortlists)
+  proj_packed (N, ceil(4d/wpi)) int32  the same projection bit-packed
+                           (kernels/ops.pack_projection, wpi = 32/bits LUT
+                           words per int32) -- the fused shortlist streams
+                           this 4-8x smaller operand instead of `proj`
   s_grid   (N, seg, L, sl) int8  string-grid layout (full search / rescore)
   labels   (N,)    int32   class / token labels; -1 marks an empty slot
                            (never written, or a ragged-shard pad row)
@@ -22,14 +26,18 @@ label -1 rows that the integer-exact mask penalty ranks last) and records
 shard-aware with no caller plumbing. Re-sharding always starts from the
 LOGICAL `cfg.capacity` rows, so `shard` is idempotent (pads never pad).
 
-Writes on a sharded store stay shard-LOCAL (the paper's economics: NAND
-programming is the cheap in-place operation). `write` dispatches to a
+Writes on a MULTI-shard store stay shard-LOCAL (the paper's economics:
+NAND programming is the cheap in-place operation). `write` dispatches to a
 shard_map write-through in which each shard computes which slice of the
 (replicated) incoming batch lands in its own ring segment and programs
-values/proj/s_grid/labels in place -- the compiled HLO contains no
-cross-device collectives and no scatter (tests/test_store.py), and the
-result is bit-identical to the unsharded scatter path, including ragged
-pads and ring wraparound across shard boundaries.
+values/proj/proj_packed/s_grid/labels in place -- the compiled HLO
+contains no cross-device collectives and no scatter (tests/test_store.py),
+and the result is bit-identical to the unsharded scatter path, including
+ragged pads and ring wraparound across shard boundaries. With 1 shard (or
+no mesh) the write-through's collective-free advantage cannot exist and
+its per-row ring inversion just costs VPU time (7.7x slower in
+bench_engine_sharded), so `write` routes single-shard stores through the
+plain scatter path -- same bits, fast path.
 
 All update methods are functional (returning a new store); the store is a
 pytree, so it passes through jit / shard_map / eval_shape like any array
@@ -60,8 +68,8 @@ def _quantize(x: jax.Array, levels: int, lo, hi) -> jax.Array:
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["values", "proj", "s_grid", "labels", "size",
-                      "lo", "hi"],
+         data_fields=["values", "proj", "proj_packed", "s_grid", "labels",
+                      "size", "lo", "hi"],
          meta_fields=["cfg", "mesh", "axes", "calibrated"])
 @dataclasses.dataclass(frozen=True)
 class MemoryStore:
@@ -98,6 +106,7 @@ class MemoryStore:
 
     values: jax.Array
     proj: jax.Array
+    proj_packed: jax.Array
     s_grid: jax.Array
     labels: jax.Array
     size: jax.Array
@@ -120,9 +129,11 @@ class MemoryStore:
         ragged-pad rows, empty slots, and the unsharded search."""
         enc = cfg.search.enc
         zeros = jnp.zeros((cfg.capacity, cfg.dim), jnp.int32)
+        proj = kernel_ops.support_projection(zeros, enc)
         return cls(
             values=zeros,
-            proj=kernel_ops.support_projection(zeros, enc),
+            proj=proj,
+            proj_packed=kernel_ops.pack_projection(proj, enc),
             s_grid=_layout(zeros, cfg),
             labels=jnp.full((cfg.capacity,), -1, jnp.int32),
             size=jnp.zeros((), jnp.int32),
@@ -142,9 +153,11 @@ class MemoryStore:
         n, d = values.shape
         cfg = MemoryConfig(capacity=n, dim=d, search=search_cfg)
         v = values.astype(jnp.int32)
+        proj = kernel_ops.support_projection(v, cfg.search.enc)
         return cls(
             values=v,
-            proj=kernel_ops.support_projection(v, cfg.search.enc),
+            proj=proj,
+            proj_packed=kernel_ops.pack_projection(proj, cfg.search.enc),
             s_grid=_layout(v, cfg),
             labels=labels.astype(jnp.int32),
             size=jnp.asarray(n, jnp.int32),
@@ -181,10 +194,15 @@ class MemoryStore:
         s_grid = state.get("s_grid")
         if s_grid is None:
             s_grid = _layout(state["values"], cfg)
+        packed = state.get("proj_packed")
+        if packed is None:
+            packed = kernel_ops.pack_projection(state["proj"],
+                                                cfg.search.enc)
         # legacy dicts carry no calibration flag; adopt their lo/hi as-is
         # (the pre-redesign API managed calibration itself) so the shims in
         # core/memory.py stay bit-identical.
         return cls(values=state["values"], proj=state["proj"],
+                   proj_packed=packed,
                    s_grid=s_grid, labels=state["labels"],
                    size=state["size"], lo=state["lo"], hi=state["hi"],
                    cfg=cfg, calibrated=True)
@@ -233,6 +251,13 @@ class MemoryStore:
         return self.values.shape[1]
 
     @property
+    def n_shards(self) -> int:
+        """Number of row shards (1 for an unsharded store)."""
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.axes]))
+
+    @property
     def valid(self) -> jax.Array:
         """(N,) bool: slots holding a written support (pad rows and
         never-written slots carry label -1 and are masked out of phase 1
@@ -276,10 +301,13 @@ class MemoryStore:
         than the capacity are rejected (a single batch would overwrite
         itself mid-write).
 
-        On a sharded store the write is a shard_map write-through: each
+        On a multi-shard store the write is a shard_map write-through: each
         shard programs the slice of the batch that lands in its own ring
         segment, locally -- no cross-device scatter (streaming-ingest
-        path; bit-identical to the unsharded write)."""
+        path; bit-identical to the unsharded write). A 1-shard (or
+        unsharded) store takes the plain scatter path: there is no
+        collective to avoid, and the scatter is 7.7x faster there
+        (bench_engine_sharded write rows)."""
         n = vectors.shape[0]
         ring = self.cfg.capacity
         assert n <= ring, f"write batch ({n}) exceeds capacity ({ring})"
@@ -293,7 +321,7 @@ class MemoryStore:
                 "the first write (already-quantized supports go through "
                 "MemoryStore.from_quantized instead).")
         v = _quantize(vectors, self.cfg.search.enc.levels, self.lo, self.hi)
-        if self.mesh is not None:
+        if self.mesh is not None and self.n_shards > 1:
             return self._program_streamed(v, labels, n)
         start = self.size % ring
         idx = (start + jnp.arange(n)) % ring
@@ -301,10 +329,13 @@ class MemoryStore:
 
     def _program(self, idx, v, labels, n) -> "MemoryStore":
         enc = self.cfg.search.enc
+        proj = kernel_ops.support_projection(v, enc)
         return dataclasses.replace(
             self,
             values=self.values.at[idx].set(v),
-            proj=self.proj.at[idx].set(kernel_ops.support_projection(v, enc)),
+            proj=self.proj.at[idx].set(proj),
+            proj_packed=self.proj_packed.at[idx].set(
+                kernel_ops.pack_projection(proj, enc)),
             s_grid=self.s_grid.at[idx].set(_layout(v, self.cfg)),
             labels=self.labels.at[idx].set(labels.astype(jnp.int32)),
             size=self.size + n,
@@ -332,11 +363,12 @@ class MemoryStore:
         ring = self.cfg.capacity
         enc = self.cfg.search.enc
         start = (self.size % ring).astype(jnp.int32)
-        batch = (v, kernel_ops.support_projection(v, enc),
+        proj_b = kernel_ops.support_projection(v, enc)
+        batch = (v, proj_b, kernel_ops.pack_projection(proj_b, enc),
                  _layout(v, self.cfg), labels.astype(jnp.int32))
 
-        def local(start_, v_, proj_, grid_, labels_,
-                  values_loc, proj_loc, grid_loc, labels_loc):
+        def local(start_, v_, proj_, packed_, grid_, labels_,
+                  values_loc, proj_loc, packed_loc, grid_loc, labels_loc):
             rows = values_loc.shape[0]
             g = _shard_index(mesh, axes) * jnp.int32(rows) \
                 + jnp.arange(rows, dtype=jnp.int32)       # global row ids
@@ -351,17 +383,19 @@ class MemoryStore:
                 return jnp.where(w, new[jc].astype(old.dtype), old)
 
             return (sel(v_, values_loc), sel(proj_, proj_loc),
+                    sel(packed_, packed_loc),
                     sel(grid_, grid_loc), sel(labels_, labels_loc))
 
         out = shard_map(
             local, mesh=mesh,
-            in_specs=(P(),) * 5 + (P(axes),) * 4,
-            out_specs=(P(axes),) * 4,
+            in_specs=(P(),) * 6 + (P(axes),) * 5,
+            out_specs=(P(axes),) * 5,
             check_rep=False,
-        )(start, *batch, self.values, self.proj, self.s_grid, self.labels)
+        )(start, *batch, self.values, self.proj, self.proj_packed,
+          self.s_grid, self.labels)
         return dataclasses.replace(
-            self, values=out[0], proj=out[1], s_grid=out[2], labels=out[3],
-            size=self.size + n)
+            self, values=out[0], proj=out[1], proj_packed=out[2],
+            s_grid=out[3], labels=out[4], size=self.size + n)
 
     def quantize_queries(self, queries: jax.Array) -> jax.Array:
         """Float embeddings -> quantized query words ([0, 4) for AVSS,
@@ -410,6 +444,7 @@ class MemoryStore:
             store,
             values=jax.device_put(store.values, row),
             proj=jax.device_put(store.proj, row),
+            proj_packed=jax.device_put(store.proj_packed, row),
             s_grid=jax.device_put(store.s_grid, row),
             labels=jax.device_put(store.labels, row),
             size=jax.device_put(store.size, rep),
@@ -426,6 +461,7 @@ class MemoryStore:
             return self
         return dataclasses.replace(
             self, values=self.values[:n], proj=self.proj[:n],
+            proj_packed=self.proj_packed[:n],
             s_grid=self.s_grid[:n], labels=self.labels[:n])
 
     def _pad_rows(self, pad: int) -> "MemoryStore":
@@ -433,11 +469,14 @@ class MemoryStore:
             return self
         enc = self.cfg.search.enc
         zeros = jnp.zeros((pad, self.dim), jnp.int32)
+        proj_pad = kernel_ops.support_projection(zeros, enc)
         cat = lambda a, b: jnp.concatenate([a, b], axis=0)
         return dataclasses.replace(
             self,
             values=cat(self.values, zeros),
-            proj=cat(self.proj, kernel_ops.support_projection(zeros, enc)),
+            proj=cat(self.proj, proj_pad),
+            proj_packed=cat(self.proj_packed,
+                            kernel_ops.pack_projection(proj_pad, enc)),
             s_grid=cat(self.s_grid, _layout(zeros, self.cfg)),
             labels=cat(self.labels, jnp.full((pad,), -1, jnp.int32)),
         )

@@ -99,6 +99,50 @@ def support_projection(s_values: jax.Array, enc: Encoding,
     return proj.reshape(s_values.shape[0], -1).astype(dtype)
 
 
+def projection_pack_bits(enc: Encoding, dtype=jnp.bfloat16) -> int:
+    """Field width (4/8/16/32 bits) of the packed LUT projection for `enc`.
+
+    The smallest width that holds every LUT entry AS STORED in a `dtype`
+    projection (bf16 rounds entries >= 256, e.g. long weighted encodings,
+    possibly up to the next power of two -- the packed words must reproduce
+    the stored values bit-for-bit, not the ideal ones). 32 disables the
+    shrink (1 word per int32) but keeps one code path.
+
+    Pure host-side numpy (the LUT is a compile-time constant of the
+    encoding), so it stays callable from inside jit traces."""
+    lut = np.asarray(enc_lib.avss_sum_lut(enc), np.float32)
+    m = float(lut.astype(np.dtype(dtype)).astype(np.float32).max())
+    for bits in (4, 8, 16):
+        if m < (1 << bits):
+            return bits
+    return 32
+
+
+def pack_projection(proj: jax.Array, enc: Encoding) -> jax.Array:
+    """(N, C) integer-valued LUT projection -> (N, ceil(C/wpi)) int32.
+
+    wpi = 32 / projection_pack_bits(enc, proj.dtype) projection columns per
+    int32 word: column m of the packed word holds projection columns
+    {w*dp + m, w in [0, wpi)} with dp = ceil(C/wpi), i.e. the column axis is
+    split into wpi CONTIGUOUS chunks so the kernel unpacks with shift/mask
+    and dots each chunk against the matching contiguous query slice -- no
+    in-kernel reshapes or query reordering. Materialised once at
+    MemoryStore.write time (the searches jit against it as a constant);
+    shrinks the fused-shortlist streamed operand up to 8x."""
+    bits = projection_pack_bits(enc, proj.dtype)
+    wpi = 32 // bits
+    p = proj.astype(jnp.int32)
+    n, c = p.shape
+    dp = -(-c // wpi)
+    if c != dp * wpi:
+        p = jnp.pad(p, ((0, 0), (0, dp * wpi - c)))
+    parts = p.reshape(n, wpi, dp)
+    shifts = (jnp.arange(wpi, dtype=jnp.int32) * bits)[None, :, None]
+    # fields occupy disjoint bit ranges, so the (modular) sum IS the
+    # bitwise-or of the shifted fields
+    return jnp.sum(parts << shifts, axis=1).astype(jnp.int32)
+
+
 def query_onehot(q_values: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
     """(B, d) ints in [0,4) -> (B, 4*d) one-hot."""
     oh = jax.nn.one_hot(q_values, enc_lib.CELL_STATES, dtype=dtype)
@@ -204,7 +248,8 @@ from repro.kernels.shortlist import SHORTLIST_MASK_PENALTY  # noqa: E402
 
 def lut_shortlist(q_values: jax.Array, s_values: jax.Array, enc: Encoding,
                   k: int, dtype=jnp.bfloat16, valid: jax.Array | None = None,
-                  proj: jax.Array | None = None
+                  proj: jax.Array | None = None,
+                  packed: jax.Array | None = None
                   ) -> tuple[jax.Array, jax.Array]:
     """Fused shortlist: (B, k) distances + indices without materialising the
     (B, N) distance matrix in HBM (kernels/shortlist.py).
@@ -214,9 +259,17 @@ def lut_shortlist(q_values: jax.Array, s_values: jax.Array, enc: Encoding,
     every valid row with no caller-side mask plumbing.
     proj: optional precomputed write-time projection (MemoryStore.proj),
     bit-identical to recomputing it from s_values here.
+    packed: optional bit-packed projection (MemoryStore.proj_packed, from
+    `pack_projection`); when given it is streamed INSTEAD of the wide
+    projection -- up to 8x less kernel HBM traffic, bit-identically.
     """
     from repro.kernels import shortlist as shortlist_kernel
     q1h = query_onehot(q_values, dtype)
+    if packed is not None:
+        bits = projection_pack_bits(
+            enc, proj.dtype if proj is not None else dtype)
+        return shortlist_kernel.lut_shortlist_pallas(
+            q1h, None, k, valid=valid, packed=packed, pack_bits=bits)
     sp = support_projection(s_values, enc, dtype) if proj is None \
         else proj.astype(dtype)
     return shortlist_kernel.lut_shortlist_pallas(q1h, sp, k, valid=valid)

@@ -246,6 +246,56 @@ def test_shortlist_kernel_native_mask_odd_n_ties():
     assert float(dist[0, -1]) >= SHORTLIST_MASK_PENALTY
 
 
+def test_shortlist_kernel_packed_operand_k_over_lane():
+    """The bit-packed projection operand (MemoryStore.proj_packed layout)
+    feeds the kernel bit-identically to the unpacked matrix, including
+    k > 128 (above the lane width) and k not a lane multiple, with masked
+    rows landing inside the top-k of a tie-heavy store."""
+    from repro.core.encodings import make_encoding
+    from repro.kernels import ops as kops
+    from repro.kernels.shortlist import (SHORTLIST_MASK_PENALTY,
+                                         lut_shortlist_pallas)
+    enc = make_encoding("mtmc", 8)
+    base = jax.random.randint(jax.random.PRNGKey(2), (10, 16), 0, enc.levels)
+    sv = jnp.concatenate([base] * 15, axis=0)              # 150 rows, ties
+    qv = jax.random.randint(jax.random.PRNGKey(3), (4, 16), 0, 4)
+    valid = (jnp.arange(150) % 4) != 0                     # masked in top-k
+    q1h = kops.query_onehot(qv, jnp.float32)
+    proj = kops.support_projection(sv, enc, jnp.float32)
+    dense = q1h @ proj.T + jnp.where(valid, 0.0,
+                                     SHORTLIST_MASK_PENALTY)[None]
+    k = 131                                                # > 128, not 128*m
+    neg, idx_ref = jax.lax.top_k(-dense, k)
+    packed = kops.pack_projection(proj, enc)
+    bits = kops.projection_pack_bits(enc, proj.dtype)
+    dist, idx = lut_shortlist_pallas(q1h, None, k, valid=valid,
+                                     packed=packed, pack_bits=bits)
+    np.testing.assert_array_equal(np.asarray(-neg), np.asarray(dist))
+    np.testing.assert_array_equal(np.asarray(idx_ref), np.asarray(idx))
+
+
+def test_shortlist_kernel_network_path_parity():
+    """The compiled-TPU lowering (use_network=True: per-tile bitonic sort +
+    sorted-run merge instead of lax.top_k/sort) is bit-identical to the
+    dense reference, including k > tile capacity forcing k_pad widening and
+    a non-tile-aligned N (jitted: the network is hundreds of eager ops)."""
+    from repro.core.encodings import make_encoding
+    from repro.kernels import ops as kops
+    from repro.kernels.shortlist import lut_shortlist_pallas
+    enc = make_encoding("mtmc", 8)
+    base = jax.random.randint(jax.random.PRNGKey(4), (9, 8), 0, enc.levels)
+    sv = jnp.concatenate([base] * 5, axis=0)[:44]          # 44 rows, ties
+    qv = jax.random.randint(jax.random.PRNGKey(5), (3, 8), 0, 4)
+    q1h = kops.query_onehot(qv, jnp.float32)
+    proj = kops.support_projection(sv, enc, jnp.float32)
+    neg, idx_ref = jax.lax.top_k(-(q1h @ proj.T), 40)
+    f = jax.jit(lambda q, p: lut_shortlist_pallas(
+        q, p, 40, tile_b=4, tile_n=16, k_pad=64, use_network=True))
+    dist, idx = f(q1h, proj)
+    np.testing.assert_array_equal(np.asarray(-neg), np.asarray(dist))
+    np.testing.assert_array_equal(np.asarray(idx_ref), np.asarray(idx))
+
+
 def test_sharded_fused_shortlist_matches_dense_and_unsharded():
     """Sharded `ideal` and `two_phase` above the fused threshold run the
     fused Pallas kernel inside shard_map (asserted on compiled HLO via the
