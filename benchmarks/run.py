@@ -120,11 +120,21 @@ def main() -> None:
     except (OSError, ValueError):
         pass
     merged.update(summary)
+    # fold the contract guard's latest pass/fail counts into the artifact
+    # (written by `python -m repro.analysis run`; absent = not run here)
+    contracts = None
+    try:
+        with open(os.path.join(ROOT, "results",
+                               "contract_report.json")) as f:
+            contracts = json.load(f)["summary"]
+    except (OSError, ValueError, KeyError):
+        pass
     os.makedirs(os.path.dirname(SUMMARY_PATH), exist_ok=True)
     with open(SUMMARY_PATH, "w") as f:
         json.dump({"generated_by": "benchmarks.run",
                    "last_run": sorted(only & set(SUITES)),
-                   "failed": failed, "suites": merged}, f, indent=1)
+                   "failed": failed, "contracts": contracts,
+                   "suites": merged}, f, indent=1)
     print(f"# wrote {os.path.relpath(SUMMARY_PATH, ROOT)} "
           f"({sum(len(v) for v in merged.values())} rows, "
           f"{len(merged)} suite(s))")

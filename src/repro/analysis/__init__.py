@@ -1,0 +1,16 @@
+"""Static-analysis contract guard: HLO contract registry + repo AST lint.
+
+Two passes, one CLI (`python -m repro.analysis`):
+
+  run    compile every registered (invariant x entry-point x config) cell
+         and check the compiled HLO (repro/analysis/registry.py,
+         hlo_contracts.py); writes results/contract_report.json.
+  lint   repo-specific AST rules over src/ (repro/analysis/lint.py).
+  diff   compare two contract reports; new failures exit non-zero.
+
+The test suite asserts its HLO expectations through the same
+`hlo_contracts.assert_*` helpers the registry checks with, so every
+invariant has exactly ONE spelling.
+"""
+
+from repro.analysis import hlo_contracts  # noqa: F401

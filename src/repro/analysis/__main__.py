@@ -1,0 +1,93 @@
+"""CLI for the contract guard: run / lint / diff (see package docstring).
+
+`run` forces an 8-device host platform BEFORE importing jax, so the
+sharded and multi-shard-write cells compile in-process on any machine
+(the same trick the multi-device tests use via subprocess).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_REPORT = os.path.join("results", "contract_report.json")
+
+
+def _cmd_run(args: argparse.Namespace) -> int:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count=8").strip()
+    from repro.analysis import registry
+
+    report = registry.run_cells()
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w", encoding="utf-8") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+    s = report["summary"]
+    print(f"contract report: {s['pass']} pass, {s['fail']} fail, "
+          f"{s['error']} error, {s['skip']} skip -> {args.out}")
+    bad = [r for r in report["cells"] if r["status"] in ("fail", "error")]
+    for r in bad:
+        print(f"  {r['status'].upper()} {r['entry']} "
+              f"{json.dumps(r['config'], sort_keys=True)} "
+              f"[{r['invariant']}] {r['detail']}")
+        for line in r["matched"]:
+            print(f"    | {line}")
+    return 1 if bad else 0
+
+
+def _cmd_lint(args: argparse.Namespace) -> int:
+    from repro.analysis import lint
+
+    paths = args.paths or [os.path.join("src", "repro")]
+    findings = lint.lint_paths(paths)
+    for f in findings:
+        print(f.format())
+    print(f"lint: {len(findings)} finding(s) over {len(paths)} path(s)")
+    return 1 if findings else 0
+
+
+def _failures(report: dict) -> set[str]:
+    return {f"{r['entry']}|{json.dumps(r['config'], sort_keys=True)}"
+            f"|{r['invariant']}"
+            for r in report["cells"] if r["status"] in ("fail", "error")}
+
+
+def _cmd_diff(args: argparse.Namespace) -> int:
+    with open(args.old, encoding="utf-8") as fh:
+        old = json.load(fh)
+    with open(args.new, encoding="utf-8") as fh:
+        new = json.load(fh)
+    fresh = sorted(_failures(new) - _failures(old))
+    fixed = sorted(_failures(old) - _failures(new))
+    for key in fixed:
+        print(f"fixed: {key}")
+    for key in fresh:
+        print(f"NEW FAILURE: {key}")
+    print(f"diff: {len(fresh)} new failure(s), {len(fixed)} fixed")
+    return 1 if fresh else 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = parser.add_subparsers(dest="cmd", required=True)
+    p_run = sub.add_parser("run", help="compile + check every contract cell")
+    p_run.add_argument("--out", default=DEFAULT_REPORT)
+    p_run.set_defaults(fn=_cmd_run)
+    p_lint = sub.add_parser("lint", help="repo-specific AST lint over src/")
+    p_lint.add_argument("paths", nargs="*")
+    p_lint.set_defaults(fn=_cmd_lint)
+    p_diff = sub.add_parser("diff",
+                            help="compare two reports; new failures = red")
+    p_diff.add_argument("old")
+    p_diff.add_argument("new")
+    p_diff.set_defaults(fn=_cmd_diff)
+    args = parser.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

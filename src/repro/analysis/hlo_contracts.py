@@ -1,0 +1,154 @@
+"""ONE spelling of every compiled-HLO invariant the repo guarantees.
+
+The architecture's contract is mostly *negative* statements about compiled
+programs: a store-based search must not re-run `layout_support`, a sharded
+write must not emit collectives or scatter, the fused shortlist kernel must
+engage exactly when the dispatch rule says so. Those statements used to be
+string asserts scattered through individual tests, each with its own list
+of op spellings. This module is now the single home:
+
+* the registry runner (`repro.analysis.registry`) walks every registered
+  (invariant x entry-point x config) cell through the `check_*` functions
+  and writes results/contract_report.json;
+* the test suite calls the thin `assert_*` wrappers over the SAME
+  functions, so a new op spelling (say, a new collective) is added in one
+  place and every route inherits the check.
+
+Checkers take the compiled HLO text (`jit(...).lower(...).compile()
+.as_text()`) and return the list of offending HLO lines -- empty means the
+invariant holds. The scope tags they look for are real compiler metadata:
+`layout_support` and `shortlist_fused` are `jax.named_scope` tags that
+survive into HLO op metadata (see repro/core/avss.py and
+repro/kernels/shortlist.py).
+"""
+
+from __future__ import annotations
+
+# Cross-device collectives that must never appear in a shard-local write
+# (store._program_streamed) or an unsharded search.
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "all-to-all",
+                  "collective-permute")
+
+# Every spelling XLA uses for a scatter once it reaches HLO: the op itself
+# and the dynamic-update-slice it expands to on CPU.
+SCATTER_SPELLINGS = ("scatter(", "dynamic-update-slice")
+
+# jax.named_scope tag wrapping the read-time string layout
+# (repro/core/avss.layout_support): store-based searches jit against the
+# write-time grids and must not contain it.
+LAYOUT_SCOPE_TAG = "layout_support"
+
+# jax.named_scope tag wrapping the fused Pallas shortlist
+# (repro/kernels/shortlist.lut_shortlist_pallas): present in compiled HLO
+# iff the fused kernel was traced.
+FUSED_SCOPE_TAG = "shortlist_fused"
+
+# Double-precision leak marker: no search/write/training-forward program
+# may promote to f64 (jax runs x64-disabled; this guards explicit leaks).
+F64_TYPE_TAG = "f64["
+
+
+def matched_lines(hlo: str, needles) -> list[str]:
+    """HLO lines containing any needle (stripped, deduplicated, ordered)."""
+    out, seen = [], set()
+    for line in hlo.splitlines():
+        if any(n in line for n in needles):
+            s = line.strip()
+            if s not in seen:
+                seen.add(s)
+                out.append(s)
+    return out
+
+
+# -- checkers: [] == invariant holds ----------------------------------------
+
+
+def check_no_collectives(hlo: str) -> list[str]:
+    """No cross-device collective op appears in the compiled program."""
+    return matched_lines(hlo, COLLECTIVE_OPS)
+
+
+def check_no_scatter_any_spelling(hlo: str) -> list[str]:
+    """No scatter under ANY spelling (scatter op or its CPU expansion)."""
+    return matched_lines(hlo, SCATTER_SPELLINGS)
+
+
+def check_scatter_write(hlo: str) -> list[str]:
+    """The single-shard / unsharded write DID take the scatter fast path
+    (control direction: dynamic-update-slice present)."""
+    if matched_lines(hlo, ("dynamic-update-slice",)):
+        return []
+    return ["expected a dynamic-update-slice (scatter write path) "
+            "but the compiled program contains none"]
+
+
+def check_no_layout_ops(hlo: str) -> list[str]:
+    """Store-based searches jit against write-time grids: the read-time
+    `layout_support` scope tag must not appear."""
+    return matched_lines(hlo, (LAYOUT_SCOPE_TAG,))
+
+
+def check_layout_ops_present(hlo: str) -> list[str]:
+    """Control direction: the raw-array path DOES lay the store out under
+    jit, proving the scope tag is visible in this build's HLO text."""
+    if matched_lines(hlo, (LAYOUT_SCOPE_TAG,)):
+        return []
+    return [f"expected the {LAYOUT_SCOPE_TAG!r} scope tag (read-time "
+            f"layout) but the compiled program contains none"]
+
+
+def check_fused_tag(hlo: str, expected: bool) -> list[str]:
+    """The `shortlist_fused` scope tag appears iff the dispatch rule
+    (repro/engine/sharded._use_fused) says the fused kernel engages."""
+    lines = matched_lines(hlo, (FUSED_SCOPE_TAG,))
+    if expected and not lines:
+        return [f"dispatch rule says the fused shortlist engages but the "
+                f"{FUSED_SCOPE_TAG!r} tag is absent from the compiled HLO"]
+    if not expected and lines:
+        return lines
+    return []
+
+
+def check_no_f64(hlo: str) -> list[str]:
+    """No f64 tensor anywhere in the compiled program."""
+    return matched_lines(hlo, (F64_TYPE_TAG,))
+
+
+# -- assert wrappers (the test-suite surface) -------------------------------
+
+
+def _raise(violations: list[str], what: str) -> None:
+    if violations:
+        shown = "\n  ".join(violations[:8])
+        raise AssertionError(f"{what}:\n  {shown}")
+
+
+def assert_no_collectives(hlo: str) -> None:
+    _raise(check_no_collectives(hlo), "collective ops in compiled HLO")
+
+
+def assert_no_scatter_any_spelling(hlo: str) -> None:
+    _raise(check_no_scatter_any_spelling(hlo),
+           "scatter (any spelling) in compiled HLO")
+
+
+def assert_scatter_write(hlo: str) -> None:
+    _raise(check_scatter_write(hlo), "scatter write path did not engage")
+
+
+def assert_no_layout_ops(hlo: str) -> None:
+    _raise(check_no_layout_ops(hlo),
+           "read-time layout_support ops in a store-based search")
+
+
+def assert_layout_ops_present(hlo: str) -> None:
+    _raise(check_layout_ops_present(hlo), "layout scope tag not visible")
+
+
+def assert_fused_tag(hlo: str, expected: bool) -> None:
+    _raise(check_fused_tag(hlo, expected),
+           f"fused-shortlist tag mismatch (expected engaged={expected})")
+
+
+def assert_no_f64(hlo: str) -> None:
+    _raise(check_no_f64(hlo), "f64 promotion in compiled HLO")

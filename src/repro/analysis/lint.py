@@ -1,0 +1,297 @@
+"""Repo-specific AST lint: rules generic linters cannot know.
+
+Run as `python -m repro.analysis lint [paths...]` (default: src/repro).
+Each finding carries a rule id; suppress a specific line with an
+annotation comment naming the rule, trailing or on the line above:
+
+    neg, pos = jax.lax.top_k(-dist, kp)   # lint: allow=kernel-sort
+
+Rules (ids in brackets):
+
+  [deprecated-shim]       src/ must not call the deprecated
+                          `repro.core.memory.search/distributed_search`
+                          shims internally -- everything goes through
+                          `RetrievalEngine.search` (the shims exist only
+                          for external callers and emit
+                          DeprecationWarning).
+  [kernel-sort]           no `lax.sort` / `lax.top_k` inside a function
+                          passed to `pallas_call`: Mosaic lowers neither,
+                          so such code only works in interpret mode.
+                          Interpret-only branches must be annotated.
+  [float-epsilon-tiebreak] no small float epsilons (0 < |x| < 1e-4) in
+                          ranking code (repro/engine, repro/kernels): ties
+                          break by (distance, index) lexicographic order,
+                          never by epsilon nudges (an epsilon below the
+                          f32 ulp of a vote silently does nothing -- a
+                          seed bug PR 1 fixed).
+  [serving-raw-random]    no `jax.random` sampler calls in serving paths
+                          (repro/engine, repro/kernels): serving noise is
+                          the counter-hash family keyed on absolute
+                          coordinates (core/mcam.hash_normal), which is
+                          what makes results independent of shard/tile
+                          assignment. `jax.random.key_data` (key
+                          introspection, not sampling) is allowed.
+  [ste-raw-primitive]     the STE fwd/bwd primitives (`_ste_round_fwd`,
+                          `_mtmc_ste_bwd`, ...) are only touched inside
+                          their defining modules -- everyone else uses the
+                          custom_vjp wrappers (`ste_round`,
+                          `encode_words_ste`, `ste_step`).
+  [f64-astype]            no `.astype(jnp.float64)` / `astype("float64")`
+                          -- the stack is f32/bf16/int; host-side
+                          `np.float64` (LUT construction) is fine.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+
+#: modules allowed to touch the raw STE fwd/bwd primitives (they define
+#: them); everyone else goes through the custom_vjp wrappers.
+STE_DEFINING_MODULES = ("core/quantization.py", "core/encodings.py",
+                        "core/mcam.py")
+#: ranking / serving path prefixes for the epsilon + raw-random rules.
+SERVING_PREFIXES = ("repro/engine/", "repro/kernels/")
+_STE_PRIMITIVE = re.compile(r"^_\w*ste\w*_(fwd|bwd)$")
+_ALLOW = re.compile(r"#\s*lint:\s*allow=([\w,-]+)")
+EPSILON_BOUND = 1e-4
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _suppressed(source_lines: list[str], line: int, rule: str) -> bool:
+    for ln in (line, line - 1):                # trailing or line-above
+        if 1 <= ln <= len(source_lines):
+            m = _ALLOW.search(source_lines[ln - 1])
+            if m and rule in m.group(1).split(","):
+                return True
+    return False
+
+
+def _dotted(node: ast.AST) -> str:
+    """'a.b.c' for nested Attribute/Name nodes ('' when not a plain path)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+# -- rules (each: (tree, path, source_lines) -> list[Finding]) --------------
+
+
+def _rule_deprecated_shim(tree, path, lines):
+    if path.endswith("core/memory.py"):        # the shims' own home
+        return []
+    out = []
+    shims = {"search", "distributed_search"}
+    memory_aliases = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            if node.module == "repro.core.memory":
+                for a in node.names:
+                    if a.name in shims:
+                        out.append(Finding(
+                            "deprecated-shim", path, node.lineno,
+                            f"import of deprecated shim "
+                            f"repro.core.memory.{a.name}; use "
+                            f"RetrievalEngine.search"))
+            elif node.module == "repro.core":
+                for a in node.names:
+                    if a.name == "memory":
+                        memory_aliases.add(a.asname or a.name)
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "repro.core.memory" and a.asname:
+                    memory_aliases.add(a.asname)
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in shims
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id in memory_aliases):
+            out.append(Finding(
+                "deprecated-shim", path, node.lineno,
+                f"call to deprecated shim "
+                f"{node.func.value.id}.{node.func.attr}(); use "
+                f"RetrievalEngine.search"))
+    return out
+
+
+def _kernel_functions(tree) -> dict[str, ast.AST]:
+    """Names of functions handed to pallas_call (directly, via a variable,
+    or wrapped in functools.partial) -> their FunctionDef nodes."""
+    defs = {n.name: n for n in ast.walk(tree)
+            if isinstance(n, ast.FunctionDef)}
+    partial_of = {}                            # var name -> wrapped fn name
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)
+                and _dotted(node.value.func).endswith("partial")
+                and node.value.args
+                and isinstance(node.value.args[0], ast.Name)):
+            partial_of[node.targets[0].id] = node.value.args[0].id
+    kernels = {}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _dotted(node.func).endswith("pallas_call")
+                and node.args):
+            continue
+        arg = node.args[0]
+        name = None
+        if isinstance(arg, ast.Name):
+            name = partial_of.get(arg.id, arg.id)
+        elif (isinstance(arg, ast.Call)
+              and _dotted(arg.func).endswith("partial") and arg.args
+              and isinstance(arg.args[0], ast.Name)):
+            name = arg.args[0].id
+        if name in defs:
+            kernels[name] = defs[name]
+    return kernels
+
+
+def _rule_kernel_sort(tree, path, lines):
+    out = []
+    for name, fn in _kernel_functions(tree).items():
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                d = _dotted(node.func)
+                if d.endswith("lax.sort") or d.endswith("lax.top_k"):
+                    out.append(Finding(
+                        "kernel-sort", path, node.lineno,
+                        f"{d} inside pallas kernel {name}(): Mosaic "
+                        f"lowers neither -- interpret-only paths must be "
+                        f"annotated `# lint: allow=kernel-sort`"))
+    return out
+
+
+def _rule_float_epsilon(tree, path, lines):
+    if not any(p in path for p in SERVING_PREFIXES):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Constant)
+                and isinstance(node.value, float)
+                and 0.0 < abs(node.value) < EPSILON_BOUND):
+            out.append(Finding(
+                "float-epsilon-tiebreak", path, node.lineno,
+                f"float epsilon {node.value!r} in ranking code: ties "
+                f"break by (distance, index) order, not epsilon nudges"))
+    return out
+
+
+def _rule_serving_raw_random(tree, path, lines):
+    if not any(p in path for p in SERVING_PREFIXES):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute):
+            d = _dotted(node)
+            if (d.startswith("jax.random.")
+                    and d != "jax.random.key_data"):
+                out.append(Finding(
+                    "serving-raw-random", path, node.lineno,
+                    f"{d} in a serving path: serving noise is the "
+                    f"counter-hash family (core/mcam.hash_normal), not "
+                    f"jax.random sampling"))
+    return out
+
+
+def _rule_ste_raw_primitive(tree, path, lines):
+    if any(path.endswith(m) for m in STE_DEFINING_MODULES):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        name = None
+        if isinstance(node, ast.Name):
+            name = node.id
+        elif isinstance(node, ast.Attribute):
+            name = node.attr
+        elif isinstance(node, ast.ImportFrom):
+            for a in node.names:
+                if _STE_PRIMITIVE.match(a.name):
+                    out.append(Finding(
+                        "ste-raw-primitive", path, node.lineno,
+                        f"import of raw STE primitive {a.name}; use the "
+                        f"custom_vjp wrapper"))
+            continue
+        if name and _STE_PRIMITIVE.match(name):
+            out.append(Finding(
+                "ste-raw-primitive", path, node.lineno,
+                f"use of raw STE primitive {name}; use the custom_vjp "
+                f"wrapper (ste_round / encode_words_ste / ste_step)"))
+    return out
+
+
+def _rule_f64_astype(tree, path, lines):
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and _dotted(node).endswith(
+                "jnp.float64"):
+            out.append(Finding(
+                "f64-astype", path, node.lineno,
+                "jnp.float64 in device code: the stack is f32/bf16/int "
+                "(host-side np.float64 is fine)"))
+        elif (isinstance(node, ast.Call)
+              and isinstance(node.func, ast.Attribute)
+              and node.func.attr == "astype" and node.args
+              and isinstance(node.args[0], ast.Constant)
+              and node.args[0].value == "float64"):
+            out.append(Finding(
+                "f64-astype", path, node.lineno,
+                'astype("float64") in device code'))
+    return out
+
+
+RULES = {
+    "deprecated-shim": _rule_deprecated_shim,
+    "kernel-sort": _rule_kernel_sort,
+    "float-epsilon-tiebreak": _rule_float_epsilon,
+    "serving-raw-random": _rule_serving_raw_random,
+    "ste-raw-primitive": _rule_ste_raw_primitive,
+    "f64-astype": _rule_f64_astype,
+}
+
+
+def lint_source(source: str, path: str) -> list[Finding]:
+    """All findings for one file's source text (suppressions applied)."""
+    tree = ast.parse(source, filename=path)
+    lines = source.splitlines()
+    out = []
+    for rule_id, rule in RULES.items():
+        for f in rule(tree, path, lines):
+            if not _suppressed(lines, f.line, f.rule):
+                out.append(f)
+    return sorted(out, key=lambda f: (f.path, f.line, f.rule))
+
+
+def lint_paths(paths: list[str]) -> list[Finding]:
+    """Lint every .py file under the given files/directories."""
+    files: list[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                files.extend(os.path.join(root, n) for n in names
+                             if n.endswith(".py"))
+        else:
+            files.append(p)
+    out = []
+    for fp in sorted(files):
+        with open(fp, encoding="utf-8") as fh:
+            out.extend(lint_source(fh.read(), fp))
+    return out

@@ -25,11 +25,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import mcam as mcam_lib
 from repro.core.encodings import Encoding, make_encoding

@@ -59,7 +59,8 @@ class MCAMConfig:
         smax = 1.5 * self.string_len
         s = np.unique(np.round(np.geomspace(1.0, smax, self.n_thresholds)))
         while len(s) < self.n_thresholds:  # pad with linear extras
-            s = np.unique(np.concatenate([s, s[-1:] + np.arange(1, 1 + self.n_thresholds - len(s))]))
+            extra = s[-1:] + np.arange(1, 1 + self.n_thresholds - len(s))
+            s = np.unique(np.concatenate([s, extra]))
         s = s[: self.n_thresholds].astype(np.float64)
         i_ideal = self.string_len / ((self.string_len - s) + s * self.rho)
         return np.sort(i_ideal).astype(np.float32)  # ascending
@@ -87,7 +88,8 @@ def hash_uniform(*idx: jax.Array, seed: int) -> jax.Array:
     """Deterministic uniform(0,1) from integer coordinates (broadcasting)."""
     h = jnp.uint32(seed) * jnp.uint32(0x9E3779B9) + jnp.uint32(0x85EBCA6B)
     for k, i in enumerate(idx):
-        h = _mix(h ^ (jnp.asarray(i).astype(jnp.uint32) + jnp.uint32(k + 1) * jnp.uint32(0x9E3779B9)))
+        step = jnp.uint32(k + 1) * jnp.uint32(0x9E3779B9)
+        h = _mix(h ^ (jnp.asarray(i).astype(jnp.uint32) + step))
     return (h.astype(jnp.float32) + 0.5) * jnp.float32(1.0 / 4294967296.0)
 
 

@@ -78,11 +78,11 @@ class SearchRequest:
     mode: str = "two_phase"
     k: int = 64
     backend: str = "auto"
-    axes: tuple | None = None
+    axes: tuple[str, ...] | None = None
     fused_min_rows: int | None = None
     noisy: bool | None = None
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.mode not in MODES:
             raise ValueError(
                 f"unknown search mode {self.mode!r}; expected one of {MODES}")
@@ -157,7 +157,7 @@ class SearchResult:
         """
         return jnp.take_along_axis(self.labels, self.best()[:, None], 1)[:, 0]
 
-    def asdict(self) -> dict:
+    def asdict(self) -> dict[str, jax.Array | int]:
         """Legacy result-dict view (the pre-redesign contract)."""
         return {"votes": self.votes, "dist": self.dist,
                 "indices": self.indices, "labels": self.labels,

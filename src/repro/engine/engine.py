@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import TYPE_CHECKING, Any, Hashable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -39,8 +40,13 @@ from repro.engine.api import SearchRequest, SearchResult
 from repro.engine.backends import resolve_backend
 from repro.kernels import ref as ref_kernels
 
+if TYPE_CHECKING:
+    from jax.sharding import Mesh
 
-def _noise_stream(key) -> jax.Array | None:
+    from repro.engine.store import MemoryStore
+
+
+def _noise_stream(key: jax.Array | int | None) -> jax.Array | None:
     """Fold a PRNG key (typed or legacy uint32), array or int into one
     uint32 noise-stream coordinate for the counter-based hardware noise.
     None passes through -- the stream-less coordinates are EXACTLY the
@@ -91,7 +97,8 @@ class RetrievalEngine:
     def resolved_backend(self) -> str:
         return resolve_backend(self.backend, self.cfg.use_kernel)
 
-    def _cached_replace(self, key, **changes) -> "RetrievalEngine":
+    def _cached_replace(self, key: Hashable,
+                        **changes: Any) -> "RetrievalEngine":
         """dataclasses.replace cached per instance: per-request overrides
         return the SAME engine object on every call -- no rebuild, and
         closures keyed on the engine (jit caches) keep hitting."""
@@ -132,7 +139,7 @@ class RetrievalEngine:
 
     # -- unified entry point -----------------------------------------------
 
-    def search(self, store, queries: jax.Array,
+    def search(self, store: MemoryStore, queries: jax.Array,
                request: SearchRequest | None = None) -> SearchResult:
         """Search a programmed MemoryStore: the one serving entry point.
 
@@ -181,7 +188,7 @@ class RetrievalEngine:
                     q, store.values, eng.cfg, store.mesh, axes=axes,
                     k=req.k, valid=valid, labels=store.labels,
                     s_grid=store.s_grid, proj=store.proj,
-                    packed=store.proj_packed,
+                    packed=store.proj_packed, pack_bits=store.pack_bits,
                     backend=backend, fused_min_rows=fmr)
                 # labels come from the per-shard fold (-1 on empty/pad
                 # rows): mask their votes without any global gather
@@ -195,7 +202,8 @@ class RetrievalEngine:
             res = sharded.sharded_ideal_search(
                 q1h, store.proj, store.labels, store.mesh, axes=axes,
                 k=req.k, backend=backend, fused_min_rows=fmr,
-                packed=store.proj_packed, enc=eng.cfg.enc)
+                packed=store.proj_packed, pack_bits=store.pack_bits,
+                enc=eng.cfg.enc)
             votes = jnp.where(res["labels"] >= 0, res["votes"], -jnp.inf)
             return SearchResult(votes, res["dist"], res["indices"],
                                 res["labels"], iters)
@@ -212,6 +220,7 @@ class RetrievalEngine:
             res = eng.two_phase(q, store.values, k=req.k, valid=valid,
                                 s_grid=store.s_grid, proj=store.proj,
                                 packed=store.proj_packed,
+                                pack_bits=store.pack_bits,
                                 fused_min_rows=eng._fused_threshold(req))
             labels = store.labels[res["indices"]]      # -1 on empty slots
             votes = jnp.where(labels >= 0, res["votes"], -jnp.inf)
@@ -231,7 +240,8 @@ class RetrievalEngine:
                                  or backend == "fused"):
             dist, idx = kernel_ops.lut_shortlist(
                 q, store.values, eng.cfg.enc, k, valid=valid,
-                proj=store.proj, packed=store.proj_packed)
+                proj=store.proj, packed=store.proj_packed,
+                pack_bits=store.pack_bits)
         else:
             # same dense block shortlist the sharded paths use per shard
             from repro.engine.sharded import _local_shortlist
@@ -246,8 +256,10 @@ class RetrievalEngine:
 
     def episode_votes(self, q_emb: jax.Array, s_emb: jax.Array, *,
                       clip_std: float = 2.5, sa_tau: float = 0.02,
-                      key=None, noisy: bool | None = None,
-                      rng_range=None) -> dict[str, jax.Array]:
+                      key: jax.Array | int | None = None,
+                      noisy: bool | None = None,
+                      rng_range: tuple[jax.Array, jax.Array] | None = None
+                      ) -> dict[str, jax.Array]:
         """Differentiable end-to-end MCAM forward on FLOAT embeddings.
 
         This is the training twin of `search(mode='full')`: asymmetric
@@ -325,8 +337,10 @@ class RetrievalEngine:
     def episode_scores(self, q_emb: jax.Array, s_emb: jax.Array,
                        s_labels: jax.Array, n_classes: int, *,
                        clip_std: float = 2.5, sa_tau: float = 0.02,
-                       key=None, noisy: bool | None = None,
-                       rng_range=None) -> jax.Array:
+                       key: jax.Array | int | None = None,
+                       noisy: bool | None = None,
+                       rng_range: tuple[jax.Array, jax.Array] | None = None
+                       ) -> jax.Array:
         """Per-class episodic logits (B, n_classes): `episode_votes`
         aggregated by `avss.class_mean_votes` -- the head HAT's CE loss
         trains and the served evaluation reuses (examples/fsl_omniglot.py,
@@ -339,7 +353,8 @@ class RetrievalEngine:
     # -- phase-0 helpers ---------------------------------------------------
 
     def _grids(self, q_values: jax.Array, s_values: jax.Array,
-               s_grid: jax.Array | None = None):
+               s_grid: jax.Array | None = None
+               ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
         cfg = self.cfg
         enc = cfg.enc
         sl = cfg.mcam.string_len
@@ -389,6 +404,7 @@ class RetrievalEngine:
                   valid: jax.Array | None = None,
                   proj: jax.Array | None = None,
                   packed: jax.Array | None = None,
+                  pack_bits: int | None = None,
                   fused_min_rows: int | None = None
                   ) -> tuple[jax.Array, jax.Array]:
         """Top-k supports by ideal digital AVSS distance.
@@ -411,6 +427,9 @@ class RetrievalEngine:
         packed: optional bit-packed projection (MemoryStore.proj_packed);
         the fused kernel then streams the 4-8x smaller int32 operand
         instead of `proj`, bit-identically (kernels/shortlist.py).
+        pack_bits: the width `packed` was packed with (MemoryStore
+        .pack_bits); required whenever `packed` is given without the
+        matching `proj` (the width depends on the packing dtype).
 
         Dispatch mirrors every other shortlist site: the fused Pallas
         kernel engages on the 'fused' backend, and on any kernel backend
@@ -428,7 +447,8 @@ class RetrievalEngine:
                                   and s_values.shape[0] >= fused_min_rows):
             return kernel_ops.lut_shortlist(q_values, s_values, cfg.enc, k,
                                             valid=valid, proj=proj,
-                                            packed=packed)
+                                            packed=packed,
+                                            pack_bits=pack_bits)
         if backend == "ref":
             lut = jnp.asarray(enc_lib.avss_sum_lut(cfg.enc), jnp.float32)
             dist = ref_kernels.avss_dist_ref(q_values, s_values, lut)
@@ -448,6 +468,7 @@ class RetrievalEngine:
                   s_grid: jax.Array | None = None,
                   proj: jax.Array | None = None,
                   packed: jax.Array | None = None,
+                  pack_bits: int | None = None,
                   fused_min_rows: int | None = None
                   ) -> dict[str, jax.Array]:
         """Shortlist + exact noisy rescore (beyond-paper TPU pipeline).
@@ -465,6 +486,7 @@ class RetrievalEngine:
         cfg = self.cfg
         dist, idx = self.shortlist(q_values, s_values, k, valid=valid,
                                    proj=proj, packed=packed,
+                                   pack_bits=pack_bits,
                                    fused_min_rows=fused_min_rows)
         q_grid, s_grid, weights, thresholds = self._grids(q_values, s_values,
                                                           s_grid)
@@ -476,8 +498,8 @@ class RetrievalEngine:
     # -- sharded two-phase search -------------------------------------------
 
     def sharded_two_phase(self, q_values: jax.Array, s_values: jax.Array,
-                          mesh, axes=("data",), k: int = 64,
-                          valid: jax.Array | None = None
+                          mesh: Mesh, axes: Sequence[str] = ("data",),
+                          k: int = 64, valid: jax.Array | None = None
                           ) -> dict[str, jax.Array]:
         """Two-phase search with the store row-sharded over mesh `axes`.
 

@@ -115,6 +115,7 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
                              s_grid: jax.Array | None = None,
                              proj: jax.Array | None = None,
                              packed: jax.Array | None = None,
+                             pack_bits: int | None = None,
                              backend: str = "ref",
                              fused_min_rows: int | None = None
                              ) -> dict[str, jax.Array]:
@@ -184,8 +185,12 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
     if packed is not None:
         extras.append(packed)
         extra_specs.append(P(axes))
-        pack_bits = kernel_ops.projection_pack_bits(
-            enc, proj.dtype if proj is not None else jnp.bfloat16)
+        if pack_bits is None:
+            # fallback for callers that packed from `proj` right here; the
+            # engine passes store.pack_bits (the authoritative pack-time
+            # width) so a bf16-vs-f32 proj dtype can never mis-unpack
+            pack_bits = kernel_ops.projection_pack_bits(
+                enc, proj.dtype if proj is not None else jnp.bfloat16)
     else:
         pack_bits = None
     ax = axes[0] if len(axes) == 1 else tuple(axes)
@@ -254,6 +259,7 @@ def sharded_ideal_search(q_onehot: jax.Array, proj: jax.Array,
                          k: int = 16, backend: str = "ref",
                          fused_min_rows: int | None = None,
                          packed: jax.Array | None = None,
+                         pack_bits: int | None = None,
                          enc=None) -> dict[str, jax.Array]:
     """Ideal-digital-distance block search (no rescore; cheap serving path).
 
@@ -277,11 +283,12 @@ def sharded_ideal_search(q_onehot: jax.Array, proj: jax.Array,
     rows_loc = proj.shape[0] // int(np.prod([mesh.shape[a] for a in axes]))
     fused = _use_fused(backend, rows_loc, fused_min_rows)
     extras, extra_specs = [], []
-    if packed is not None and enc is not None:
-        from repro.kernels import ops as kernel_ops
+    if packed is not None and (pack_bits is not None or enc is not None):
         extras.append(packed)
         extra_specs.append(P(axes))
-        pack_bits = kernel_ops.projection_pack_bits(enc, proj.dtype)
+        if pack_bits is None:            # fallback: derive from enc + proj
+            from repro.kernels import ops as kernel_ops
+            pack_bits = kernel_ops.projection_pack_bits(enc, proj.dtype)
     else:
         pack_bits = None
 

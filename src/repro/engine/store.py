@@ -48,20 +48,23 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding
+from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core import avss as avss_lib
 from repro.core import quantization as quant_lib
+from repro.core.avss import SearchConfig
 from repro.core.memory import MemoryConfig
 from repro.kernels import ops as kernel_ops
 
 
-def _quantize(x: jax.Array, levels: int, lo, hi) -> jax.Array:
+def _quantize(x: jax.Array, levels: int, lo: jax.Array,
+              hi: jax.Array) -> jax.Array:
     # the SAME affine quantizer hardware-aware training fake-quants with
     # (there with an STE round) -- one leg of the train/serve parity
     return quant_lib.affine_quantize(x, levels, lo, hi).astype(jnp.int32)
@@ -113,8 +116,8 @@ class MemoryStore:
     lo: jax.Array
     hi: jax.Array
     cfg: MemoryConfig
-    mesh: object = None
-    axes: tuple = ()
+    mesh: Mesh | None = None
+    axes: tuple[str, ...] = ()
     calibrated: bool = False
 
     # -- construction --------------------------------------------------------
@@ -144,7 +147,7 @@ class MemoryStore:
 
     @classmethod
     def from_quantized(cls, values: jax.Array, labels: jax.Array,
-                       search_cfg) -> "MemoryStore":
+                       search_cfg: SearchConfig) -> "MemoryStore":
         """Program an already-quantized support set (ints in [0, levels))
         as a full store of capacity == len(values). The episodic evaluation
         path (examples/fsl_omniglot.py) quantizes asymmetrically per
@@ -168,7 +171,7 @@ class MemoryStore:
 
     @classmethod
     def from_episode(cls, s_emb: jax.Array, q_emb: jax.Array,
-                     labels: jax.Array, search_cfg,
+                     labels: jax.Array, search_cfg: SearchConfig,
                      clip_std: float = 2.5,
                      capacity: int | None = None) -> "MemoryStore":
         """Program an episode's FLOAT support embeddings the way the
@@ -187,7 +190,8 @@ class MemoryStore:
             s_emb, labels.astype(jnp.int32))
 
     @classmethod
-    def from_state(cls, state: dict, cfg: MemoryConfig) -> "MemoryStore":
+    def from_state(cls, state: dict[str, jax.Array],
+                   cfg: MemoryConfig) -> "MemoryStore":
         """Adopt a legacy `core.memory` state dict (pre-redesign contract).
         Dicts from old checkpoints may lack the write-time `s_grid`; it is
         derived from `values` (deterministic, so results stay identical)."""
@@ -207,7 +211,7 @@ class MemoryStore:
                    size=state["size"], lo=state["lo"], hi=state["hi"],
                    cfg=cfg, calibrated=True)
 
-    def to_state(self) -> dict:
+    def to_state(self) -> dict[str, jax.Array]:
         """Legacy state-dict view (the pre-redesign `core.memory` contract,
         plus the write-time `s_grid`)."""
         return {"values": self.values, "proj": self.proj,
@@ -256,6 +260,17 @@ class MemoryStore:
         if self.mesh is None:
             return 1
         return int(np.prod([self.mesh.shape[a] for a in self.axes]))
+
+    @property
+    def pack_bits(self) -> int:
+        """Field width (4/8/16/32) of `proj_packed`, fixed at PACK time by
+        the encoding and the stored `proj` dtype. This is the one
+        authoritative spelling: consumers must unpack with the width the
+        operand was packed with, never re-derive it from a default dtype
+        (a bf16-vs-f32 projection changes the width for large-LUT
+        encodings -- see ops.projection_pack_bits)."""
+        return kernel_ops.projection_pack_bits(self.cfg.search.enc,
+                                               self.proj.dtype)
 
     @property
     def valid(self) -> jax.Array:
@@ -327,7 +342,8 @@ class MemoryStore:
         idx = (start + jnp.arange(n)) % ring
         return self._program(idx, v, labels, n)
 
-    def _program(self, idx, v, labels, n) -> "MemoryStore":
+    def _program(self, idx: jax.Array, v: jax.Array, labels: jax.Array,
+                 n: int) -> "MemoryStore":
         enc = self.cfg.search.enc
         proj = kernel_ops.support_projection(v, enc)
         return dataclasses.replace(
@@ -341,7 +357,8 @@ class MemoryStore:
             size=self.size + n,
         )
 
-    def _program_streamed(self, v, labels, n) -> "MemoryStore":
+    def _program_streamed(self, v: jax.Array, labels: jax.Array,
+                          n: int) -> "MemoryStore":
         """Shard-local write-through: program a quantized batch into a
         row-sharded store with NO cross-device data movement.
 
@@ -367,8 +384,11 @@ class MemoryStore:
         batch = (v, proj_b, kernel_ops.pack_projection(proj_b, enc),
                  _layout(v, self.cfg), labels.astype(jnp.int32))
 
-        def local(start_, v_, proj_, packed_, grid_, labels_,
-                  values_loc, proj_loc, packed_loc, grid_loc, labels_loc):
+        def local(start_: jax.Array, v_: jax.Array, proj_: jax.Array,
+                  packed_: jax.Array, grid_: jax.Array, labels_: jax.Array,
+                  values_loc: jax.Array, proj_loc: jax.Array,
+                  packed_loc: jax.Array, grid_loc: jax.Array,
+                  labels_loc: jax.Array) -> tuple[jax.Array, ...]:
             rows = values_loc.shape[0]
             g = _shard_index(mesh, axes) * jnp.int32(rows) \
                 + jnp.arange(rows, dtype=jnp.int32)       # global row ids
@@ -378,7 +398,7 @@ class MemoryStore:
             written = (j < n) & (g < ring)                # pads stay pads
             jc = jnp.minimum(j, jnp.int32(n - 1))         # safe gather idx
 
-            def sel(new, old):
+            def sel(new: jax.Array, old: jax.Array) -> jax.Array:
                 w = written.reshape((-1,) + (1,) * (old.ndim - 1))
                 return jnp.where(w, new[jc].astype(old.dtype), old)
 
@@ -419,7 +439,8 @@ class MemoryStore:
 
     # -- sharding ------------------------------------------------------------
 
-    def shard(self, mesh, axes=("data",)) -> "MemoryStore":
+    def shard(self, mesh: Mesh,
+              axes: Sequence[str] = ("data",)) -> "MemoryStore":
         """Row-shard the store over mesh `axes` and record the sharding as
         a store property (RetrievalEngine.search dispatches on it).
 

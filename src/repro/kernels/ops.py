@@ -17,7 +17,6 @@ Public entry points:
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +25,6 @@ import numpy as np
 from repro.core import encodings as enc_lib
 from repro.core import mcam as mcam_lib
 from repro.core.encodings import Encoding
-from repro.core.mcam import MCAMConfig
 from repro.kernels import mcam_dist, ref
 from repro.kernels import mcam_search as mcam_search_kernel
 
@@ -249,7 +247,8 @@ from repro.kernels.shortlist import SHORTLIST_MASK_PENALTY  # noqa: E402
 def lut_shortlist(q_values: jax.Array, s_values: jax.Array, enc: Encoding,
                   k: int, dtype=jnp.bfloat16, valid: jax.Array | None = None,
                   proj: jax.Array | None = None,
-                  packed: jax.Array | None = None
+                  packed: jax.Array | None = None,
+                  pack_bits: int | None = None
                   ) -> tuple[jax.Array, jax.Array]:
     """Fused shortlist: (B, k) distances + indices without materialising the
     (B, N) distance matrix in HBM (kernels/shortlist.py).
@@ -262,11 +261,18 @@ def lut_shortlist(q_values: jax.Array, s_values: jax.Array, enc: Encoding,
     packed: optional bit-packed projection (MemoryStore.proj_packed, from
     `pack_projection`); when given it is streamed INSTEAD of the wide
     projection -- up to 8x less kernel HBM traffic, bit-identically.
+    pack_bits: the field width `packed` was PACKED with
+    (MemoryStore.pack_bits / projection_pack_bits at pack time). Pass it
+    whenever the packing dtype can differ from `proj`/`dtype` here: the
+    width is a property of the packed operand, and re-deriving it from a
+    different dtype mis-unpacks large-LUT encodings (a bf16-rounded LUT
+    entry can force 32-bit fields while the f32 projection packs to 16 --
+    tests/test_analysis.py pins the b4e edge case).
     """
     from repro.kernels import shortlist as shortlist_kernel
     q1h = query_onehot(q_values, dtype)
     if packed is not None:
-        bits = projection_pack_bits(
+        bits = pack_bits if pack_bits is not None else projection_pack_bits(
             enc, proj.dtype if proj is not None else dtype)
         return shortlist_kernel.lut_shortlist_pallas(
             q1h, None, k, valid=valid, packed=packed, pack_bits=bits)

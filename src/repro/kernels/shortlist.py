@@ -226,6 +226,7 @@ def _shortlist_kernel(q_ref, s_ref, *refs, kp: int, tile_n: int,
         td, ti = _bitonic_sort(dist, n_abs, col)
         td, ti = td[:, :kp], ti[:, :kp]    # tile pre-top-k, sorted
     else:
+        # interpret-only native path:  # lint: allow=kernel-sort
         neg, pos = jax.lax.top_k(-dist, kp)      # tile pre-top-k, sorted
         td, ti = -neg, j * tile_n + pos
     if not merge:                          # single N step: the tile top-kp
@@ -238,6 +239,7 @@ def _shortlist_kernel(q_ref, s_ref, *refs, kp: int, tile_n: int,
     else:
         cd = jnp.concatenate([d_ref[...], td], axis=1)
         ci = jnp.concatenate([i_ref[...], ti], axis=1)
+        # interpret-only native path:  # lint: allow=kernel-sort
         sd, si = jax.lax.sort((cd, ci), dimension=1, num_keys=2)
         d_new, i_new = sd[:, :kp], si[:, :kp]
     d_ref[...] = d_new

@@ -36,7 +36,7 @@ from repro.configs.base import TrainConfig
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as tfm
-from repro.models.sharding import active_mesh, rules_for_mesh
+from repro.models.sharding import active_mesh
 
 # TPU v5e hardware constants (per chip)
 PEAK_FLOPS = 197e12        # bf16

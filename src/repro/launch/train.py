@@ -27,7 +27,6 @@ are checkpointed under --ckpt-dir for a separate serving process.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -35,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.configs import SHAPES, load_config
+from repro.configs import load_config
 from repro.configs.base import ShapeConfig, TrainConfig
 from repro.data.lm import LMDataConfig, SyntheticLM, embedding_batch_for_step
 from repro.launch import steps as steps_lib

@@ -12,7 +12,6 @@ between encodings/search modes on the same controller.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -19,14 +19,11 @@ Public API (all pure functions):
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L

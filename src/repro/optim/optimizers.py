@@ -18,7 +18,6 @@ int8 gradient-compression codec used by the distributed train step.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable
 
 import jax

@@ -15,7 +15,6 @@ still applies because shard_map composes.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

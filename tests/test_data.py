@@ -5,8 +5,6 @@ import pytest
 
 pytest.importorskip("hypothesis", reason="property tests need hypothesis "
                     "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
-
 from repro.data.fsl import CUBLike, EpisodeSampler, OmniglotLike, pretrain_batch
 from repro.data.lm import LMDataConfig, SyntheticLM, embedding_batch_for_step
 

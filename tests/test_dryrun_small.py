@@ -7,7 +7,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.dryrun import _shape_bytes, model_flops, parse_collectives
-from repro.models.sharding import Rules, legalize_spec
+from repro.models.sharding import legalize_spec
 
 
 HLO = """

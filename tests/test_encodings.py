@@ -8,7 +8,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis "
                     "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.encodings import (avss_max_lut, avss_sum_lut, avss_word_luts,
+from repro.core.encodings import (avss_max_lut, avss_sum_lut,
                                   make_encoding)
 
 TABLE1_MTMC = ["00000", "00001", "00011", "00111", "01111", "11111", "11112",

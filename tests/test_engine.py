@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import hlo_contracts as hc
 from repro.core import avss as avss_lib
 from repro.core.avss import SearchConfig
 from repro.core.mcam import MCAMConfig
@@ -274,6 +275,41 @@ def test_shortlist_kernel_packed_operand_k_over_lane():
     np.testing.assert_array_equal(np.asarray(idx_ref), np.asarray(idx))
 
 
+def test_packed_shortlist_pack_bits_is_pack_time_width():
+    """Regression: the unpack width must be the PACK-time width, never
+    re-derived from a default dtype. b4e cl=8 is the edge that catches it:
+    the max LUT entry (65535) rounds to 65536 in bf16, so
+    projection_pack_bits says 32 for a bf16 projection but 16 for the f32
+    projection the store actually packs. Deriving bits from the bf16
+    default while holding a 16-bit-packed operand mis-unpacks every field;
+    `pack_bits` (MemoryStore.pack_bits) pins the width end to end."""
+    from repro.core.encodings import make_encoding
+    from repro.kernels import ops as kops
+    from repro.kernels.shortlist import lut_shortlist_pallas
+    enc = make_encoding("b4e", 8)
+    # the widths genuinely diverge on this encoding -- the test's premise
+    assert kops.projection_pack_bits(enc, jnp.float32) == 16
+    assert kops.projection_pack_bits(enc, jnp.bfloat16) == 32
+    base = jax.random.randint(jax.random.PRNGKey(6), (9, 12), 0, enc.levels)
+    sv = jnp.concatenate([base] * 4, axis=0)               # 36 rows, ties
+    qv = jax.random.randint(jax.random.PRNGKey(7), (3, 12), 0, 4)
+    q1h = kops.query_onehot(qv, jnp.float32)
+    proj = kops.support_projection(sv, enc, jnp.float32)   # write-time f32
+    packed = kops.pack_projection(proj, enc)               # 16-bit fields
+    neg, idx_ref = jax.lax.top_k(-(q1h @ proj.T), 20)
+    # kernel entry point: explicit pack-time width, packed-only operand
+    dist, idx = lut_shortlist_pallas(q1h, None, 20, packed=packed,
+                                     pack_bits=16)
+    np.testing.assert_array_equal(np.asarray(-neg), np.asarray(dist))
+    np.testing.assert_array_equal(np.asarray(idx_ref), np.asarray(idx))
+    # ops entry point: packed WITHOUT proj used to fall back to the bf16
+    # default (32 bits); the explicit pack_bits must win
+    dist2, idx2 = kops.lut_shortlist(qv, sv, enc, 20, packed=packed,
+                                     pack_bits=16)
+    np.testing.assert_array_equal(np.asarray(-neg), np.asarray(dist2))
+    np.testing.assert_array_equal(np.asarray(idx_ref), np.asarray(idx2))
+
+
 def test_shortlist_kernel_network_path_parity():
     """The compiled-TPU lowering (use_network=True: per-tile bitonic sort +
     sorted-run merge instead of lax.top_k/sort) is bit-identical to the
@@ -330,7 +366,7 @@ def test_sharded_fused_shortlist_matches_dense_and_unsharded():
                     np.asarray(getattr(ref, key)),
                     np.asarray(getattr(got, key)),
                     err_msg=f"{mode}/fmr={fmr}/{key}")
-            assert ("shortlist_fused" in hlo) == fused, (mode, fmr)
+            hc.assert_fused_tag(hlo, fused)
         # masked candidates did reach the merged top-k (k=60 > 54 valid)
         assert np.isneginf(np.asarray(ref.votes)).any(), mode
 
@@ -386,6 +422,7 @@ def test_sharded_fused_8dev_ragged_bit_identical():
     inside the merged top-k."""
     code = """
         import jax, jax.numpy as jnp, numpy as np
+        from repro.analysis import hlo_contracts as hc
         from repro.core.avss import SearchConfig
         from repro.core.memory import MemoryConfig
         from repro.engine import MemoryStore, RetrievalEngine, SearchRequest
@@ -417,8 +454,7 @@ def test_sharded_fused_8dev_ragged_bit_identical():
                     outs[tag] = f(sstore, q)
                     hlo = jax.jit(lambda st, qq, r=req: eng.search(
                         st, qq, r).votes).lower(sstore, q).compile().as_text()
-                assert ("shortlist_fused" in hlo) == (tag == "fused"), (
-                    mode, tag)
+                hc.assert_fused_tag(hlo, tag == "fused")
             for tag in ("fused", "dense"):
                 for key in ("votes", "dist", "indices", "labels"):
                     np.testing.assert_array_equal(
@@ -433,12 +469,12 @@ def test_sharded_fused_8dev_ragged_bit_identical():
                 cfg.search, backend="fused").search(
                     st, qq, SearchRequest(mode="ideal", k=13)).votes
                 ).lower(sstore, q).compile().as_text()
-            assert "shortlist_fused" in hlo
+            hc.assert_fused_tag(hlo, True)
             hlo = jax.jit(lambda st, qq: RetrievalEngine(
                 cfg.search, backend="mxu", fused_min_rows=13).search(
                     st, qq, SearchRequest(mode="two_phase", k=13)).votes
                 ).lower(sstore, q).compile().as_text()
-            assert "shortlist_fused" in hlo
+            hc.assert_fused_tag(hlo, True)
         print("SHARDED-FUSED-OK")
     """
     env = dict(os.environ)

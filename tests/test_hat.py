@@ -7,9 +7,9 @@ import pytest
 
 from repro.core import hat
 from repro.core.avss import SearchConfig
-from repro.core.hat import HATConfig, meta_loss, mtmc_word_ste, simulate_mcam, ste_step
+from repro.core.hat import HATConfig, mtmc_word_ste, simulate_mcam, ste_step
 from repro.core.mcam import MCAMConfig
-from repro.core.quantization import fake_quant, QuantSpec, quantize_asymmetric, ste_round
+from repro.core.quantization import quantize_asymmetric, ste_round
 
 
 def test_ste_round_gradient_is_identity():

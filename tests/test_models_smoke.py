@@ -1,7 +1,6 @@
 """Deliverable (f): per-arch smoke tests -- reduced same-family config, one
 forward + one train step on CPU, asserting output shapes + no NaNs."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ Validates the paper's HEADLINE CLAIMS directionally:
     classifies a synthetic few-shot episode.
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
