@@ -12,6 +12,12 @@ configuration the engine actually serves). Every timed variant is also
 checked bit-exact against the dense reference, so a tile-shape regression
 fails the run (the fast CI job runs `--dry-run` on every push).
 
+Before anything is timed, every explicit (tile_b, tile_n, k_pad) config is
+priced by the symbolic VMEM model (repro/analysis/vmem.py) against the
+16 MiB TPU budget; over-budget configs are skipped up front (recorded under
+`skipped_configs` in the output JSON) so a TPU autotune session cannot OOM
+mid-sweep.
+
 The crossover -- the smallest swept N whose best fused config is at least
 as fast as dense -- is written to `results/autotune_shortlist.json` as
 `fused_min_rows`. Applying it needs no code change: the knob is already
@@ -37,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import time_us
+from repro.analysis import vmem as vmem_lib
 from repro.core.encodings import make_encoding
 from repro.kernels import ops as kernel_ops
 from repro.kernels.shortlist import lut_shortlist_pallas
@@ -57,9 +64,38 @@ def _dense(q1h, proj, k):
     return -neg, idx
 
 
+def plan_configs(tile_bs, tile_ns, k_pads, *, k, width, pack_bits,
+                 q_dtype_bytes=2):
+    """Static VMEM gate over the sweep grid (analysis/vmem.py): every
+    explicit (tile_b, tile_n, k_pad) config is priced against the TPU
+    budget BEFORE anything lowers, so an oversized tile can never OOM a
+    TPU autotune session. Returns (accepted configs, skipped records);
+    ("default",) -- the kernel's adaptive tiling -- is always accepted."""
+    configs = [("default",)]
+    skipped = []
+    for tb, tn, kpd in itertools.product(tile_bs, tile_ns, k_pads):
+        chk = vmem_lib.validate_config(
+            tb, tn, k, width=width, k_pad=kpd, pack_bits=pack_bits,
+            q_dtype_bytes=q_dtype_bytes, use_network=True)
+        if chk.ok:
+            configs.append((tb, tn, kpd))
+        else:
+            skipped.append({"config": f"tb={tb},tn={tn},kp={kpd}",
+                            "vmem_bytes": chk.estimate.total_bytes,
+                            "budget_bytes": chk.budget_bytes,
+                            "reason": chk.reason})
+    return configs, skipped
+
+
 def sweep(ns, tile_bs, tile_ns, k_pads, B, D, k, iters):
     enc = make_encoding("mtmc", 8)
     bits = kernel_ops.projection_pack_bits(enc, jnp.bfloat16)
+    # the gate models the compiled TPU lowering (bf16 query operand,
+    # bitonic network padding) -- the only target with a VMEM budget
+    configs, skipped = plan_configs(tile_bs, tile_ns, k_pads, k=k,
+                                    width=4 * D, pack_bits=bits)
+    for s in skipped:
+        print(f"# skip {s['config']}: {s['reason']}")
     rows, crossover = [], None
     for n in ns:
         sv = jax.random.randint(jax.random.PRNGKey(n), (n, D), 0, enc.levels)
@@ -74,8 +110,6 @@ def sweep(ns, tile_bs, tile_ns, k_pads, B, D, k, iters):
         best = None
         # ("default",) = the kernel's adaptive interpret tiling -- what an
         # untuned engine run actually executes
-        configs = [("default",)] + list(
-            itertools.product(tile_bs, tile_ns, k_pads))
         for cfgt in configs:
             kw = {} if cfgt == ("default",) else dict(
                 tile_b=cfgt[0], tile_n=cfgt[1], k_pad=cfgt[2])
@@ -96,7 +130,7 @@ def sweep(ns, tile_bs, tile_ns, k_pads, B, D, k, iters):
                 best = (label, us)
         if crossover is None and best[1] <= us_dense:
             crossover = n
-    return rows, crossover
+    return rows, crossover, skipped
 
 
 def main() -> None:
@@ -106,7 +140,7 @@ def main() -> None:
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args()
     params = DRY if args.dry_run else FULL
-    rows, crossover = sweep(**params)
+    rows, crossover, skipped = sweep(**params)
     out = {
         "generated_by": "benchmarks.autotune_shortlist"
                         + (" --dry-run" if args.dry_run else ""),
@@ -115,6 +149,7 @@ def main() -> None:
                        if jax.default_backend() == "cpu" else "compiled",
         "params": {k: v for k, v in params.items()},
         "fused_min_rows": crossover,
+        "skipped_configs": skipped,
         "rows": rows,
     }
     os.makedirs(os.path.dirname(args.out), exist_ok=True)

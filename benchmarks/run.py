@@ -129,11 +129,21 @@ def main() -> None:
             contracts = json.load(f)["summary"]
     except (OSError, ValueError, KeyError):
         pass
+    # ... and the resource oracle's route counts + total static FLOPs
+    # (written by `python -m repro.analysis cost`; absent = not run here)
+    resources = None
+    try:
+        with open(os.path.join(ROOT, "results",
+                               "resource_report.json")) as f:
+            resources = json.load(f)["summary"]
+    except (OSError, ValueError, KeyError):
+        pass
     os.makedirs(os.path.dirname(SUMMARY_PATH), exist_ok=True)
     with open(SUMMARY_PATH, "w") as f:
         json.dump({"generated_by": "benchmarks.run",
                    "last_run": sorted(only & set(SUITES)),
                    "failed": failed, "contracts": contracts,
+                   "resources": resources,
                    "suites": merged}, f, indent=1)
     print(f"# wrote {os.path.relpath(SUMMARY_PATH, ROOT)} "
           f"({sum(len(v) for v in merged.values())} rows, "

@@ -1,8 +1,9 @@
-"""CLI for the contract guard: run / lint / diff (see package docstring).
+"""CLI for the contract guard: run / lint / diff / cost / cost-diff
+(see package docstring).
 
-`run` forces an 8-device host platform BEFORE importing jax, so the
-sharded and multi-shard-write cells compile in-process on any machine
-(the same trick the multi-device tests use via subprocess).
+`run` and `cost` force an 8-device host platform BEFORE importing jax,
+so the sharded and multi-shard-write cells compile in-process on any
+machine (the same trick the multi-device tests use via subprocess).
 """
 
 from __future__ import annotations
@@ -13,13 +14,18 @@ import os
 import sys
 
 DEFAULT_REPORT = os.path.join("results", "contract_report.json")
+DEFAULT_RESOURCES = os.path.join("results", "resource_report.json")
 
 
-def _cmd_run(args: argparse.Namespace) -> int:
+def _force_host_devices() -> None:
     flags = os.environ.get("XLA_FLAGS", "")
     if "xla_force_host_platform_device_count" not in flags:
         os.environ["XLA_FLAGS"] = (
             f"{flags} --xla_force_host_platform_device_count=8").strip()
+
+
+def _cmd_run(args: argparse.Namespace) -> int:
+    _force_host_devices()
     from repro.analysis import registry
 
     report = registry.run_cells()
@@ -71,6 +77,46 @@ def _cmd_diff(args: argparse.Namespace) -> int:
     return 1 if fresh else 0
 
 
+def _cmd_cost(args: argparse.Namespace) -> int:
+    _force_host_devices()
+    from repro.analysis import cost
+
+    report = cost.resource_report()
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w", encoding="utf-8") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+    s = report["summary"]
+    print(f"resource report: {s['ok']} route(s) ok, {s['skip']} skip, "
+          f"{s['error']} error -> {args.out}")
+    bad = [r for r in report["routes"] if r["status"] == "error"]
+    for r in bad:
+        print(f"  ERROR {r['entry']} "
+              f"{json.dumps(r['config'], sort_keys=True)} {r['detail']}")
+    return 1 if bad else 0
+
+
+def _cmd_cost_diff(args: argparse.Namespace) -> int:
+    from repro.analysis import cost
+
+    with open(args.old, encoding="utf-8") as fh:
+        old = json.load(fh)
+    with open(args.new, encoding="utf-8") as fh:
+        new = json.load(fh)
+    d = cost.diff_resource_reports(old, new, rtol=args.rtol)
+    for key in d["missing"]:
+        print(f"MISSING ROUTE: {key}")
+    for row in d["drifted"]:
+        rel = f" ({row['rel']:+.1%})" if row["rel"] is not None else ""
+        print(f"DRIFT: {row['route']} {row['field']} "
+              f"{row['old']} -> {row['new']}{rel}")
+    for key in d["added"]:
+        print(f"added: {key}")
+    print(f"cost-diff: {len(d['drifted'])} drift(s), "
+          f"{len(d['missing'])} missing, {len(d['added'])} added "
+          f"(rtol={args.rtol})")
+    return 1 if d["drifted"] or d["missing"] else 0
+
+
 def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(prog="python -m repro.analysis")
     sub = parser.add_subparsers(dest="cmd", required=True)
@@ -85,6 +131,19 @@ def main(argv: list[str] | None = None) -> int:
     p_diff.add_argument("old")
     p_diff.add_argument("new")
     p_diff.set_defaults(fn=_cmd_diff)
+    p_cost = sub.add_parser(
+        "cost", help="static FLOPs/HBM resource row per registry route")
+    p_cost.add_argument("--out", default=DEFAULT_RESOURCES)
+    p_cost.set_defaults(fn=_cmd_cost)
+    p_cdiff = sub.add_parser(
+        "cost-diff",
+        help="compare two resource reports; drift or lost routes = red")
+    p_cdiff.add_argument("old")
+    p_cdiff.add_argument("new")
+    p_cdiff.add_argument("--rtol", type=float, default=0.05,
+                         help="relative drift tolerance per field "
+                              "(default 0.05; jit_entries is exact)")
+    p_cdiff.set_defaults(fn=_cmd_cost_diff)
     args = parser.parse_args(argv)
     return args.fn(args)
 

@@ -39,6 +39,13 @@ Rules (ids in brackets):
   [f64-astype]            no `.astype(jnp.float64)` / `astype("float64")`
                           -- the stack is f32/bf16/int; host-side
                           `np.float64` (LUT construction) is fine.
+  [cost-call]             no direct `compiled.cost_analysis()` /
+                          `compiled.memory_analysis()` calls outside
+                          `repro.analysis` -- the resource oracle
+                          (repro/analysis/cost.py) is the ONE cost
+                          model; readers go through its helpers so
+                          per-device list handling, stat-name drift and
+                          error fallbacks stay in one place.
 """
 
 from __future__ import annotations
@@ -258,6 +265,22 @@ def _rule_f64_astype(tree, path, lines):
     return out
 
 
+def _rule_cost_call(tree, path, lines):
+    if "repro/analysis" in path.replace(os.sep, "/"):
+        return []                       # the cost model's own home
+    out = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("cost_analysis",
+                                       "memory_analysis")):
+            out.append(Finding(
+                "cost-call", path, node.lineno,
+                f"direct {node.func.attr}() call outside repro.analysis; "
+                f"go through repro.analysis.cost (the one cost model)"))
+    return out
+
+
 RULES = {
     "deprecated-shim": _rule_deprecated_shim,
     "kernel-sort": _rule_kernel_sort,
@@ -265,6 +288,7 @@ RULES = {
     "serving-raw-random": _rule_serving_raw_random,
     "ste-raw-primitive": _rule_ste_raw_primitive,
     "f64-astype": _rule_f64_astype,
+    "cost-call": _rule_cost_call,
 }
 
 

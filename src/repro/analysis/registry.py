@@ -37,6 +37,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import cost as cost_lib
 from repro.analysis import hlo_contracts as hc
 
 #: k used by every search cell (small, so cells compile in milliseconds).
@@ -213,10 +214,7 @@ def _hbm_stats(compiled, B: int, k: int, N: int, d: int) -> dict:
     are recorded (trend data) without binding."""
     kp = 128 if k <= 128 else k                 # lane-width internal pad
     bound = 4 * 4 * (B * kp * 2 + N * 4 * d)
-    try:
-        measured = int(compiled.memory_analysis().temp_size_in_bytes)
-    except Exception:                           # stats unavailable: record 0
-        measured = 0
+    measured = cost_lib.temp_bytes(compiled)
     return {"measured_bytes": measured, "bound_bytes": bound,
             "strict": jax.default_backend() == "tpu"}
 

@@ -1,0 +1,168 @@
+"""Symbolic VMEM model of the fused shortlist kernel (resource oracle 3b).
+
+`kernels/shortlist.lut_shortlist_pallas` declares its per-grid-step
+working set entirely through BlockSpecs, so the VMEM footprint of a
+tiling config is a CLOSED-FORM function of the knobs -- no compile, no
+TPU. This module mirrors the wrapper's width arithmetic exactly (same
+kp rounding, same packed-width query padding, same tile_n power-of-two
+rounding) and prices the resident blocks:
+
+    q block     (tile_b, W)       query one-hots; W is the streamed
+                                  query width (packed: padded to dp*wpi)
+    s block     (tile_n, S)       projection tile: (tile_n, 4d) in the
+                                  operand dtype, or (tile_n, dp) int32
+                                  bit-packed
+    pen block   (1, tile_n) f32   row-penalty stream (masked stores)
+    out blocks  2 x (tile_b, kp)  running top-k buffer (f32 + int32)
+    scratch                       the sort's live vectors: the
+                                  (tile_b, tile_n) distance block and
+                                  its row-index iota, times the copies
+                                  a compare-exchange stage keeps live,
+                                  plus the merge's (tile_b, kp) pairs
+
+    total = 2*(q + s + pen)       double-buffered input streams
+          + 2*out                 revisited output block, both buffers
+          + scratch
+
+Validated against interpret-mode `memory_analysis()` on a config sweep
+(tests/test_vmem.py): on a single-tile grid the jitted call's
+argument + output bytes equal the model's single-buffered block bytes
+within the model's own `padding_slack_bytes` (query width pad, kp > k
+output pad, f32 penalty stream vs the caller's bool row mask) -- and
+EXACTLY for unpacked, unmasked, native-path configs.
+
+`validate_config` is the static gate: benchmarks/autotune_shortlist.py
+rejects sweep configs whose estimate exceeds the 16 MiB TPU VMEM budget
+BEFORE timing anything, so a TPU autotune session cannot OOM mid-sweep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels.shortlist import LANE, _pow2_at_least
+
+#: per-core VMEM budget the gate enforces (TPU v4/v5 generations).
+TPU_VMEM_BYTES = 16 * 2 ** 20
+
+#: live (distance, index) vector-pair copies during a bitonic
+#: compare-exchange stage: the block itself plus the rolled partner
+#: values (kernels/shortlist._cmpex materialises pd/pi next to d/i).
+SORT_LIVE_PAIRS = 2
+
+_PAIR_BYTES = 4 + 4                    # f32 distance + int32 row index
+
+
+@dataclasses.dataclass(frozen=True)
+class VmemEstimate:
+    """Closed-form per-tile VMEM footprint of one shortlist config.
+
+    All byte fields derive from the BlockSpecs of
+    `kernels/shortlist.lut_shortlist_pallas` (module docstring has the
+    formula). `io_block_bytes` is the single-buffered operand + output
+    block sum -- what interpret-mode memory_analysis measures as
+    argument + output bytes on a single-tile grid; `total_bytes` is the
+    double-buffered budget number the gate compares to TPU_VMEM_BYTES;
+    `padding_slack_bytes` bounds the model-vs-measured gap attributable
+    to pure padding.
+    """
+
+    tile_b: int
+    tile_n: int                        # effective: power of two >= kp
+    kp: int                            # internal top-k buffer width
+    q_block_bytes: int
+    s_block_bytes: int
+    pen_block_bytes: int
+    out_block_bytes: int
+    scratch_bytes: int
+    io_block_bytes: int
+    total_bytes: int
+    padding_slack_bytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigCheck:
+    """Verdict of `validate_config`: ok, the estimate behind it, the
+    budget it was held against, and a human-readable reason when not ok.
+    """
+
+    ok: bool
+    estimate: VmemEstimate
+    budget_bytes: int
+    reason: str
+
+
+def shortlist_vmem(tile_b: int, tile_n: int, k: int, *, width: int,
+                   k_pad: int = LANE, pack_bits: int | None = None,
+                   q_dtype_bytes: int = 4, masked: bool = False,
+                   use_network: bool = True) -> VmemEstimate:
+    """Per-tile VMEM bytes of `lut_shortlist_pallas` for one config.
+
+    width: the logical one-hot query width 4*d (the kernel's K).
+    q_dtype_bytes: bytes/element of the query operand as passed (2 for
+    bf16, 4 for f32); the model applies the same f32 forcing the
+    wrapper does for pack_bits > 8. Assumes B >= tile_b and
+    N >= tile_n -- the autotune/serving regime; the wrapper shrinks
+    tiles otherwise, which only lowers the footprint.
+    """
+    if use_network:
+        # bitonic stages need power-of-two runs >= the lane width
+        kp = _pow2_at_least(max(k, k_pad, 1))
+    else:
+        kp = max(k, 1)
+    tile_n_eff = max(_pow2_at_least(max(tile_n, 1)), kp)
+    if pack_bits is not None:
+        assert pack_bits in (4, 8, 16, 32), pack_bits
+        wpi = 32 // pack_bits
+        dp = -(-width // wpi)          # ceil: packed projection columns
+        q_width = dp * wpi             # wrapper pads the query up to this
+        q_el = 4 if pack_bits > 8 else q_dtype_bytes
+        s_block = tile_n_eff * dp * 4  # int32 packed words
+    else:
+        q_width = width
+        q_el = q_dtype_bytes
+        s_block = tile_n_eff * width * q_dtype_bytes
+    q_block = tile_b * q_width * q_el
+    pen_block = tile_n_eff * 4 if masked else 0
+    out_block = tile_b * kp * _PAIR_BYTES
+    live = SORT_LIVE_PAIRS if use_network else 1
+    scratch = live * _PAIR_BYTES * tile_b * tile_n_eff \
+        + (2 * _PAIR_BYTES * tile_b * kp if use_network else 0)
+    io = q_block + s_block + pen_block + out_block
+    total = 2 * (q_block + s_block + pen_block) + 2 * out_block + scratch
+    slack = ((q_width - width) * tile_b * q_el          # query width pad
+             + pen_block                                # f32 penalty stream
+             + (tile_n_eff if masked else 0)            # caller's bool mask
+             + (kp - k) * tile_b * _PAIR_BYTES)         # kp > k output pad
+    return VmemEstimate(tile_b=tile_b, tile_n=tile_n_eff, kp=kp,
+                        q_block_bytes=q_block, s_block_bytes=s_block,
+                        pen_block_bytes=pen_block,
+                        out_block_bytes=out_block, scratch_bytes=scratch,
+                        io_block_bytes=io, total_bytes=total,
+                        padding_slack_bytes=slack)
+
+
+def validate_config(tile_b: int, tile_n: int, k: int, *, width: int,
+                    k_pad: int = LANE, pack_bits: int | None = None,
+                    q_dtype_bytes: int = 4, masked: bool = False,
+                    use_network: bool = True,
+                    budget_bytes: int = TPU_VMEM_BYTES) -> ConfigCheck:
+    """Static accept/reject of one tiling config against the VMEM budget.
+
+    The gate models the COMPILED TPU lowering (use_network=True, bitonic
+    kp padding) by default -- the only target where the budget exists;
+    interpret mode has no VMEM to exhaust. Callers reject before ever
+    lowering the config, so an oversized tile can never OOM a sweep.
+    """
+    est = shortlist_vmem(tile_b, tile_n, k, width=width, k_pad=k_pad,
+                         pack_bits=pack_bits, q_dtype_bytes=q_dtype_bytes,
+                         masked=masked, use_network=use_network)
+    if est.total_bytes > budget_bytes:
+        return ConfigCheck(
+            ok=False, estimate=est, budget_bytes=budget_bytes,
+            reason=(f"estimated {est.total_bytes} B VMEM/tile exceeds the "
+                    f"{budget_bytes} B budget (s block "
+                    f"{est.s_block_bytes} B, scratch "
+                    f"{est.scratch_bytes} B, out {est.out_block_bytes} B)"))
+    return ConfigCheck(ok=True, estimate=est, budget_bytes=budget_bytes,
+                       reason="")

@@ -48,13 +48,20 @@ tests/test_engine.py::test_sharded_two_phase_bit_identical):
 
 from __future__ import annotations
 
+from typing import TYPE_CHECKING, Any, Sequence
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+if TYPE_CHECKING:
+    from jax.sharding import Mesh
 
-def _shard_index(mesh, axes) -> jax.Array:
+    from repro.core.avss import SearchConfig
+
+
+def _shard_index(mesh: Mesh, axes: Sequence[str]) -> jax.Array:
     """Row-major linear index of this shard over `axes` (inside shard_map)."""
     shard = jnp.int32(0)
     for a in axes:
@@ -63,14 +70,15 @@ def _shard_index(mesh, axes) -> jax.Array:
     return shard
 
 
-def _gather_candidates(x: jax.Array, axes) -> jax.Array:
+def _gather_candidates(x: jax.Array, axes: Sequence[str]) -> jax.Array:
     """(B, kk) per-shard -> (B, S * kk) shard-major (ascending global rows)."""
     ax = axes[0] if len(axes) == 1 else tuple(axes)
     stacked = jax.lax.all_gather(x, ax, tiled=False).reshape(-1, *x.shape)
     return jnp.moveaxis(stacked, 0, 1).reshape(x.shape[0], -1)
 
 
-def _use_fused(backend: str, rows_loc: int, fused_min_rows) -> bool:
+def _use_fused(backend: str, rows_loc: int,
+               fused_min_rows: int | None) -> bool:
     """Shared shard-local dispatch rule: the fused Pallas shortlist kernel
     engages on any kernel backend once a shard's local rows reach the
     threshold, and always on the 'fused' backend; the 'ref' backend (and
@@ -82,8 +90,10 @@ def _use_fused(backend: str, rows_loc: int, fused_min_rows) -> bool:
             and rows_loc >= fused_min_rows)
 
 
-def _local_shortlist(q1h, proj_loc, valid_loc, k_loc, *, fused: bool,
-                     packed=None, pack_bits=None
+def _local_shortlist(q1h: jax.Array, proj_loc: jax.Array,
+                     valid_loc: jax.Array, k_loc: int, *, fused: bool,
+                     packed: jax.Array | None = None,
+                     pack_bits: int | None = None
                      ) -> tuple[jax.Array, jax.Array]:
     """Block shortlist shared by every dispatch site (per shard inside the
     shard_map bodies here, and the unsharded dense `ideal` route in
@@ -109,7 +119,8 @@ def _local_shortlist(q1h, proj_loc, valid_loc, k_loc, *, fused: bool,
 
 
 def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
-                             cfg, mesh, axes=("data",),
+                             cfg: SearchConfig, mesh: Mesh,
+                             axes: Sequence[str] = ("data",),
                              k: int = 64, valid: jax.Array | None = None,
                              labels: jax.Array | None = None,
                              s_grid: jax.Array | None = None,
@@ -172,7 +183,8 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
         # keep the shard_map arity fixed; +0.0 is exact, parity unaffected
         valid = jnp.ones((N,), bool)
     # optional row-sharded extras keep the arity dynamic but the specs tied
-    extras, extra_specs = [], []
+    extras: list[jax.Array] = []
+    extra_specs: list[P] = []
     if labels is not None:
         extras.append(labels)
         extra_specs.append(P(axes))
@@ -195,12 +207,14 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
         pack_bits = None
     ax = axes[0] if len(axes) == 1 else tuple(axes)
 
-    def local(q1h_, q_grid_, s_loc, valid_loc, *rest):
-        rest = list(rest)
-        labels_loc = rest.pop(0) if labels is not None else None
-        s_grid_loc = rest.pop(0) if s_grid is not None else None
-        proj_loc = rest.pop(0) if proj is not None else None
-        packed_loc = rest.pop(0) if packed is not None else None
+    def local(q1h_: jax.Array, q_grid_: jax.Array, s_loc: jax.Array,
+              valid_loc: jax.Array,
+              *rest: jax.Array) -> tuple[jax.Array, ...]:
+        rest_l = list(rest)
+        labels_loc = rest_l.pop(0) if labels is not None else None
+        s_grid_loc = rest_l.pop(0) if s_grid is not None else None
+        proj_loc = rest_l.pop(0) if proj is not None else None
+        packed_loc = rest_l.pop(0) if packed is not None else None
         offset = _shard_index(mesh, axes) * jnp.int32(s_loc.shape[0])
         # phase 1 on local rows: exact integer-valued distances, fused
         # kernel or dense MXU matmul (same LUT projection as
@@ -255,12 +269,13 @@ def sharded_two_phase_search(q_values: jax.Array, s_values: jax.Array,
 
 
 def sharded_ideal_search(q_onehot: jax.Array, proj: jax.Array,
-                         labels: jax.Array, mesh, axes=("data",),
+                         labels: jax.Array, mesh: Mesh,
+                         axes: Sequence[str] = ("data",),
                          k: int = 16, backend: str = "ref",
                          fused_min_rows: int | None = None,
                          packed: jax.Array | None = None,
                          pack_bits: int | None = None,
-                         enc=None) -> dict[str, jax.Array]:
+                         enc: Any = None) -> dict[str, jax.Array]:
     """Ideal-digital-distance block search (no rescore; cheap serving path).
 
     q_onehot: (B, 4d) replicated query one-hots; proj: (N, 4d) row-sharded
@@ -282,7 +297,8 @@ def sharded_ideal_search(q_onehot: jax.Array, proj: jax.Array,
 
     rows_loc = proj.shape[0] // int(np.prod([mesh.shape[a] for a in axes]))
     fused = _use_fused(backend, rows_loc, fused_min_rows)
-    extras, extra_specs = [], []
+    extras: list[jax.Array] = []
+    extra_specs: list[P] = []
     if packed is not None and (pack_bits is not None or enc is not None):
         extras.append(packed)
         extra_specs.append(P(axes))
@@ -292,7 +308,9 @@ def sharded_ideal_search(q_onehot: jax.Array, proj: jax.Array,
     else:
         pack_bits = None
 
-    def local(qr, proj_loc, labels_loc, *rest):
+    def local(qr: jax.Array, proj_loc: jax.Array, labels_loc: jax.Array,
+              *rest: jax.Array
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
         packed_loc = rest[0] if rest else None
         offset = _shard_index(mesh, axes) * jnp.int32(proj_loc.shape[0])
         kk = min(k, proj_loc.shape[0])

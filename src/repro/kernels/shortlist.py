@@ -64,6 +64,7 @@ sum equals the unpacked dot exactly (integer-valued f32 partials below
 from __future__ import annotations
 
 import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -100,19 +101,21 @@ def _pow2_at_least(x: int) -> int:
 # ---------------------------------------------------------------------------
 
 
-def _lex_lt(ad, ai, bd, bi):
+def _lex_lt(ad: jax.Array, ai: jax.Array, bd: jax.Array,
+            bi: jax.Array) -> jax.Array:
     """(ad, ai) strictly before (bd, bi) under the (distance, row) order."""
     return (ad < bd) | ((ad == bd) & (ai < bi))
 
 
-def _exchange(x, col, s):
+def _exchange(x: jax.Array, col: jax.Array, s: int) -> jax.Array:
     """Value held by each column's stride-s partner (column col XOR s)."""
     fwd = jnp.roll(x, -s, axis=1)
     bwd = jnp.roll(x, s, axis=1)
     return jnp.where((col & s) == 0, fwd, bwd)
 
 
-def _cmpex(d, i, col, s, desc):
+def _cmpex(d: jax.Array, i: jax.Array, col: jax.Array, s: int,
+           desc: jax.Array) -> tuple[jax.Array, jax.Array]:
     """One compare-exchange stage at stride s: within each partner pair the
     lower column keeps the lex-min (ascending blocks; `desc` flips)."""
     pd = _exchange(d, col, s)
@@ -123,7 +126,8 @@ def _cmpex(d, i, col, s, desc):
     return jnp.where(use_p, pd, d), jnp.where(use_p, pi, i)
 
 
-def _bitonic_sort(d, i, col):
+def _bitonic_sort(d: jax.Array, i: jax.Array,
+                  col: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Full bitonic sort, ascending in (d, i), over the lane axis."""
     width = d.shape[1]
     size = 2
@@ -137,7 +141,7 @@ def _bitonic_sort(d, i, col):
     return d, i
 
 
-def _reverse_lanes(x, col):
+def _reverse_lanes(x: jax.Array, col: jax.Array) -> jax.Array:
     """Lane reversal via XOR-stride exchanges: flipping every bit of the
     column index (width-1-c == c XOR (width-1)) is the composition of one
     unconditional partner swap per stride, and those commute."""
@@ -148,7 +152,8 @@ def _reverse_lanes(x, col):
     return x
 
 
-def _merge_topk(ad, ai, bd, bi, col):
+def _merge_topk(ad: jax.Array, ai: jax.Array, bd: jax.Array, bi: jax.Array,
+                col: jax.Array) -> tuple[jax.Array, jax.Array]:
     """kp smallest of two sorted length-kp runs, sorted. [A | reverse(B)]
     is bitonic, so the stride-kp compare-exchange restricted to the lower
     half is the pairwise lex-min of A against reversed B; the result is
@@ -172,7 +177,8 @@ def _merge_topk(ad, ai, bd, bi, col):
 # ---------------------------------------------------------------------------
 
 
-def _dist_block(q, s, pack_bits):
+def _dist_block(q: jax.Array, s: jax.Array,
+                pack_bits: int | None) -> jax.Array:
     """(tile_b, tile_n) integer-valued f32 distance block on the MXU.
 
     Unpacked (pack_bits None): one dot against the (tile_n, C) projection
@@ -192,23 +198,25 @@ def _dist_block(q, s, pack_bits):
         mask = jnp.int32((1 << pack_bits) - 1)
         parts = [((s >> jnp.int32(pack_bits * w)) & mask).astype(q.dtype)
                  for w in range(wpi)]
-    dist = None
+    dist: jax.Array | None = None
     for w, part in enumerate(parts):
         d = jax.lax.dot_general(q[:, w * dp:(w + 1) * dp], part, dims,
                                 preferred_element_type=jnp.float32)
         dist = d if dist is None else dist + d
+    assert dist is not None
     return dist
 
 
-def _shortlist_kernel(q_ref, s_ref, *refs, kp: int, tile_n: int,
-                      n_real: int, masked: bool, use_network: bool,
-                      pack_bits, n_padded: bool, merge: bool):
+def _shortlist_kernel(q_ref: Any, s_ref: Any, *refs: Any, kp: int,
+                      tile_n: int, n_real: int, masked: bool,
+                      use_network: bool, pack_bits: int | None,
+                      n_padded: bool, merge: bool) -> None:
     pen_ref, d_ref, i_ref = refs if masked else (None, *refs)
     j = pl.program_id(1)
 
     if merge:
         @pl.when(j == 0)
-        def _init():
+        def _init() -> None:
             d_ref[...] = jnp.full_like(d_ref, jnp.inf)
             i_ref[...] = jnp.full_like(i_ref, jnp.int32(_IDX_SENTINEL))
 
@@ -305,7 +313,8 @@ def lut_shortlist_pallas(q_onehot: jax.Array, s_proj: jax.Array | None,
     """
     B, K = q_onehot.shape
     if packed is not None:
-        assert pack_bits in (4, 8, 16, 32), pack_bits
+        assert pack_bits is not None and pack_bits in (4, 8, 16, 32), \
+            pack_bits
         N, dp = packed.shape
         wpi = 32 // pack_bits
         width = dp * wpi
@@ -319,6 +328,7 @@ def lut_shortlist_pallas(q_onehot: jax.Array, s_proj: jax.Array | None,
             q_onehot = jnp.pad(q_onehot, ((0, 0), (0, width - K)))
         s_stream, s_width = packed, dp
     else:
+        assert s_proj is not None, "need s_proj when packed is not given"
         N, K2 = s_proj.shape
         assert K == K2, (K, K2)
         pack_bits = None

@@ -23,7 +23,6 @@ bounded, and the collective set is what DESIGN.md claims. Output JSON:
 import argparse
 import dataclasses
 import json
-import re
 import sys
 import time
 
@@ -31,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import cost as cost_lib
 from repro.configs import SHAPES, load_config, supports_shape
 from repro.configs.base import TrainConfig
 from repro.launch import steps as steps_lib
@@ -43,57 +43,12 @@ PEAK_FLOPS = 197e12        # bf16
 HBM_BW = 819e9             # bytes/s
 ICI_BW = 50e9              # bytes/s/link
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "token": 0,
-}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-
-def _shape_bytes(tok: str) -> int:
-    m = _SHAPE_RE.match(tok)
-    if not m or m.group(1) not in _DTYPE_BYTES:
-        return 0
-    dims = m.group(2)
-    n = 1
-    for d in dims.split(","):
-        if d:
-            n *= int(d)
-    return n * _DTYPE_BYTES[m.group(1)]
-
-
-def parse_collectives(hlo: str) -> dict:
-    """Sum per-device payload bytes of every collective in partitioned HLO.
-
-    Methodology (documented in EXPERIMENTS.md): result-shape bytes per op,
-    doubled for all-reduce (reduce+broadcast phases of a ring); the (P-1)/P
-    ring factor is dropped (upper bound).
-    """
-    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
-    for line in hlo.splitlines():
-        s = line.strip()
-        if "=" not in s:
-            continue
-        for kind in _COLLECTIVES:
-            # match "<kind>(" or "<kind>-start(" as the op on this line
-            if re.search(rf"= [^=]*\b{kind}(-start)?\(", s):
-                rhs = s.split("=", 1)[1].strip()
-                # result type: everything before the op name
-                head = re.split(rf"\b{kind}(-start)?\(", rhs)[0]
-                shapes = _SHAPE_RE.findall(head)
-                nbytes = sum(_shape_bytes(f"{t}[{d}]") for t, d in shapes)
-                if kind == "all-reduce":
-                    nbytes *= 2
-                out[kind]["count"] += 1
-                out[kind]["bytes"] += nbytes
-                break
-    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
-                             if isinstance(v, dict))
-    return out
+# Cost/HLO extraction is the analysis package's cost model
+# (repro/analysis/cost.py, ONE spelling for the whole repo); these
+# aliases keep dryrun's long-standing surface (tests import them here).
+_COLLECTIVES = cost_lib.COLLECTIVE_KINDS
+_shape_bytes = cost_lib.shape_bytes
+parse_collectives = cost_lib.parse_collectives
 
 
 def _tree_bytes_per_device(tree) -> int:
@@ -195,44 +150,18 @@ def _compile_step(cfg, shape, mesh, rules, tc, retrieval, unroll=False):
     return compiled, int(state_bytes)
 
 
-def _metrics(compiled) -> dict:
-    """Per-device flops/bytes + per-collective byte totals (UNcorrected:
-    scan bodies counted once -- see _corrected_metrics)."""
-    cost = compiled.cost_analysis() or {}
-    if isinstance(cost, (list, tuple)):  # older jax: one dict per device
-        cost = cost[0] if cost else {}
-    coll = parse_collectives(compiled.as_text())
-    out = {"flops": float(cost.get("flops", 0.0)),
-           "bytes": float(cost.get("bytes accessed", 0.0))}
-    for k in _COLLECTIVES:
-        out[f"coll_{k}"] = float(coll[k]["bytes"])
-    out["coll_total"] = float(coll["total_bytes"])
-    return out
-
-
-def _m_add(a, b, sa=1.0, sb=1.0):
-    return {k: sa * a[k] + sb * b.get(k, 0.0) for k in a}
-
-
-def _m_clamp(a):
-    return {k: max(v, 0.0) for k, v in a.items()}
+# per-device flops/bytes + per-collective byte totals (UNcorrected: scan
+# bodies counted once -- see _corrected_metrics)
+_metrics = cost_lib.roofline_metrics
 
 
 def _corrected_metrics(cfg, shape, mesh, rules, tc, retrieval) -> dict:
     """Trip-count-corrected totals. XLA's cost_analysis counts each
     while-loop (lax.scan) body ONCE; the real step executes the layer-scan
-    body L_g times inside an accumulation scan of A steps. We recover true
-    totals by finite-differencing compiled cost over scan lengths:
-
-        M1   : every layer group at count 1, accumulation 1
-        M2_g : group g at count 2 (others 1), accumulation 1
-        M3   : groups at 1, accumulation 2              (train only)
-
-        F_g      = M2_g - M1                 (one layer of group g)
-        F_micro  = (M3 - M1) - sum_g F_g     (per-microbatch fixed cost)
-        F_fixed  = 2*M1 - M3
-        total    = F_fixed + A * (F_micro + sum_g L_g * F_g)
-    """
+    body L_g times inside an accumulation scan of A steps. This builds the
+    compiled count variants (M1 / M2_g / M3); the finite-difference
+    recovery of true totals is repro.analysis.cost.scan_trip_count_totals
+    (the formula is documented there)."""
     groups = [list(g) for g in cfg.layer_groups()]
     mb = steps_lib.microbatch_for(cfg, shape)
     accum = (shape.global_batch // mb) if shape.kind == "train" else 1
@@ -251,30 +180,15 @@ def _corrected_metrics(cfg, shape, mesh, rules, tc, retrieval) -> dict:
 
     ones = [1] * len(groups)
     m1 = variant(ones, 1)
-    f_groups = []
+    m2_groups = []
     for gi in range(len(groups)):
         counts = list(ones)
         counts[gi] = 2
-        m2 = variant(counts, 1)
-        f_groups.append(_m_clamp(_m_add(m2, m1, 1.0, -1.0)))
-    if shape.kind == "train" and accum > 1:
-        m3 = variant(ones, 2)
-        sum_fg = {k: sum(f[k] for f in f_groups) for k in m1}
-        f_micro = _m_clamp(_m_add(_m_add(m3, m1, 1.0, -1.0), sum_fg,
-                                  1.0, -1.0))
-        f_fixed = _m_clamp(_m_add(m1, _m_add(m3, m1, 1.0, -1.0), 1.0, -1.0))
-    else:
-        sum_fg = {k: sum(f[k] for f in f_groups) for k in m1}
-        f_micro = {k: 0.0 for k in m1}
-        f_fixed = _m_clamp(_m_add(m1, sum_fg, 1.0, -1.0))
-        accum = 1
-
-    counts = [c for (_, _, c) in cfg.layer_groups()]
-    total = {}
-    for k in m1:
-        inner = f_micro[k] + sum(L * f[k] for L, f in zip(counts, f_groups))
-        total[k] = f_fixed[k] + accum * inner
-    return total
+        m2_groups.append(variant(counts, 1))
+    m3 = variant(ones, 2) if shape.kind == "train" and accum > 1 else None
+    layer_counts = [c for (_, _, c) in cfg.layer_groups()]
+    return cost_lib.scan_trip_count_totals(m1, m2_groups, layer_counts,
+                                           accum, m3=m3)
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
@@ -299,14 +213,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     compiled, state_bytes = _compile_step(cfg, shape, mesh, rules, tc,
                                           retrieval)
     compile_s = time.time() - t0
-    try:
-        ma = compiled.memory_analysis()
-        mem = {k: int(getattr(ma, k)) for k in
-               ("argument_size_in_bytes", "output_size_in_bytes",
-                "temp_size_in_bytes", "generated_code_size_in_bytes")
-               if hasattr(ma, k)}
-    except Exception as e:  # pragma: no cover
-        mem = {"error": str(e)}
+    mem = cost_lib.compiled_memory(compiled)
     raw = _metrics(compiled)
 
     # 2. trip-count-corrected roofline terms

@@ -135,6 +135,24 @@ def test_lint_ste_and_f64():
                   "src/repro/core/quantization.py") == []
 
 
+def test_lint_cost_call():
+    src = """
+        def f(compiled):
+            c = compiled.cost_analysis()
+            m = compiled.memory_analysis()
+            return c, m
+    """
+    assert _rules(src, "src/repro/launch/d.py") == ["cost-call"]
+    # the cost model's own package is exempt (it IS the one spelling)
+    assert _rules(src, "src/repro/analysis/cost.py") == []
+    # suppression names the rule
+    ok = src.replace("compiled.cost_analysis()",
+                     "compiled.cost_analysis()  # lint: allow=cost-call")
+    ok = ok.replace("compiled.memory_analysis()",
+                    "compiled.memory_analysis()  # lint: allow=cost-call")
+    assert _rules(ok, "src/repro/launch/d.py") == []
+
+
 def test_lint_trailing_suppression():
     src = 'import jax\nn = jax.random.normal  # lint: allow=serving-raw-random\n'
     assert lint.lint_source(src, "src/repro/engine/e.py") == []

@@ -37,6 +37,12 @@ def test_autotune_shortlist_dry_run_schema(tmp_path):
     fmr = doc["fused_min_rows"]
     assert fmr is None or fmr in swept_ns, fmr
 
+    # skipped_configs: the static VMEM gate's rejections (analysis/vmem.py)
+    # -- present (possibly empty), never leaking into the timed rows
+    assert isinstance(doc["skipped_configs"], list)
+    assert doc["skipped_configs"] == [], \
+        "dry-sweep tiles fit VMEM comfortably; a rejection is a model bug"
+
     # rows: one dense row per N plus >= 1 fused config row, each timed
     rows = doc["rows"]
     for n in swept_ns:

@@ -1,0 +1,188 @@
+"""Symbolic VMEM model (repro/analysis/vmem) vs interpret-mode reality.
+
+The model's closed-form per-tile bytes are validated against
+`memory_analysis()` of the jitted kernel on single-tile grids: argument +
+output bytes must equal the model's `io_block_bytes` -- exactly for
+unpacked/unmasked/native configs, within the model's own
+`padding_slack_bytes` otherwise. A deterministic config quartet runs in
+the fast tier; a hypothesis sweep (slow tier) fuzzes the tiling knobs.
+The static gate (`validate_config` + benchmarks/autotune_shortlist
+.plan_configs) must accept every real sweep config and reject a
+deliberately VMEM-overflowing one before anything lowers.
+"""
+
+import itertools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import cost, vmem
+from repro.core.encodings import make_encoding
+from repro.kernels import ops as kernel_ops
+from repro.kernels.shortlist import lut_shortlist_pallas
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # CI installs it; local may not
+    HAVE_HYPOTHESIS = False
+
+
+def _measured_io_bytes(tile_b, tile_n, k, *, d, masked, use_network,
+                       packed_enc=None):
+    """Argument + output bytes of the jitted kernel on a single-tile grid
+    (B = tile_b, N = the model's effective tile_n), via the one cost
+    model's `compiled_memory`."""
+    est = vmem.shortlist_vmem(
+        tile_b, tile_n, k, width=4 * d,
+        pack_bits=packed_enc and kernel_ops.projection_pack_bits(
+            packed_enc, jnp.float32),
+        masked=masked, use_network=use_network)
+    B, N = tile_b, est.tile_n
+    sv = jax.random.randint(jax.random.PRNGKey(0), (N, d), 0,
+                            (packed_enc.levels if packed_enc else 4))
+    qv = jax.random.randint(jax.random.PRNGKey(1), (B, d), 0, 4)
+    q1h = kernel_ops.query_onehot(qv, jnp.float32)
+    kw = dict(k=k, tile_b=tile_b, tile_n=N, interpret=True,
+              use_network=use_network)
+    args = []
+    if packed_enc is not None:
+        proj = kernel_ops.support_projection(sv, packed_enc, jnp.float32)
+        args.append(kernel_ops.pack_projection(proj, packed_enc))
+        kw["pack_bits"] = kernel_ops.projection_pack_bits(
+            packed_enc, jnp.float32)
+        fn = lambda q, p, v=None: lut_shortlist_pallas(
+            q, None, packed=p, valid=v, **kw)
+    else:
+        args.append(jnp.asarray(
+            jax.random.randint(jax.random.PRNGKey(2), (N, 4 * d), 0, 4),
+            jnp.float32))
+        fn = lambda q, s, v=None: lut_shortlist_pallas(q, s, valid=v, **kw)
+    if masked:
+        args.append(jnp.arange(N) % 3 != 0)
+    compiled = jax.jit(fn).lower(q1h, *args).compile()
+    mem = cost.compiled_memory(compiled)
+    # output_size_in_bytes carries the runtime's tuple pointer table (8 B
+    # per output leaf on XLA:CPU) on top of the (dist, idx) buffers the
+    # model prices -- measure it and take it back out
+    leaf_bytes = sum(
+        int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+        for s in jax.tree_util.tree_leaves(jax.eval_shape(fn, q1h, *args)))
+    table = mem["output_size_in_bytes"] - leaf_bytes
+    assert 0 <= table <= 64, (mem, leaf_bytes)
+    return (mem["argument_size_in_bytes"]
+            + mem["output_size_in_bytes"] - table, est)
+
+
+def test_vmem_model_exact_on_native_unpacked_unmasked():
+    """The anchor: no padding anywhere -> model == measured, byte for
+    byte."""
+    measured, est = _measured_io_bytes(8, 256, 16, d=48, masked=False,
+                                       use_network=False)
+    assert est.padding_slack_bytes == 0
+    assert measured == est.io_block_bytes
+
+
+@pytest.mark.parametrize("masked,use_network,packed",
+                         [(True, False, False),    # penalty stream pad
+                          (False, True, False),    # kp > k output pad
+                          (False, False, True),    # packed query-width pad
+                          (True, True, True)])     # everything at once
+def test_vmem_model_within_padding_slack(masked, use_network, packed):
+    enc = make_encoding("mtmc", 8) if packed else None
+    measured, est = _measured_io_bytes(8, 256, 16, d=48, masked=masked,
+                                       use_network=use_network,
+                                       packed_enc=enc)
+    assert abs(measured - est.io_block_bytes) <= est.padding_slack_bytes, \
+        (measured, est)
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=20, deadline=None)
+    @given(tile_b=st.sampled_from([1, 2, 4, 8]),
+           tile_n=st.sampled_from([128, 192, 256, 512]),
+           k=st.integers(min_value=1, max_value=32),
+           masked=st.booleans(), use_network=st.booleans())
+    def test_vmem_model_property_sweep(tile_b, tile_n, k, masked,
+                                       use_network):
+        measured, est = _measured_io_bytes(tile_b, tile_n, k, d=16,
+                                           masked=masked,
+                                           use_network=use_network)
+        assert abs(measured - est.io_block_bytes) \
+            <= est.padding_slack_bytes, (measured, est)
+else:                                    # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_vmem_model_property_sweep():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# The static gate: real sweep configs pass, an overflowing tile is
+# rejected before anything lowers.
+# ---------------------------------------------------------------------------
+
+
+def test_validate_config_accepts_every_real_sweep_config():
+    # the FULL autotune grid (benchmarks/autotune_shortlist.FULL) must
+    # never be gated out -- its biggest tile is well under 1 MiB
+    for tb, tn, kpd in itertools.product((8, 16), (256, 512, 1024),
+                                         (128, 256)):
+        chk = vmem.validate_config(tb, tn, 64, width=4 * 48, k_pad=kpd,
+                                   pack_bits=8, q_dtype_bytes=2)
+        assert chk.ok, chk.reason
+        assert chk.estimate.total_bytes < vmem.TPU_VMEM_BYTES // 8
+
+
+def test_validate_config_rejects_vmem_overflow():
+    chk = vmem.validate_config(8, 2 ** 19, 16, width=64, pack_bits=8)
+    assert not chk.ok
+    assert chk.estimate.total_bytes > chk.budget_bytes
+    assert "exceeds" in chk.reason and "budget" in chk.reason
+
+
+def test_validate_config_honours_custom_budget():
+    chk = vmem.validate_config(8, 256, 16, width=64, budget_bytes=1)
+    assert not chk.ok
+
+
+def _autotune():
+    if ROOT not in sys.path:
+        sys.path.insert(0, ROOT)
+    import benchmarks.autotune_shortlist as at
+    return at
+
+
+def test_autotune_plan_configs_gates_statically():
+    at = _autotune()
+    configs, skipped = at.plan_configs((8,), (256, 2 ** 19), (128,),
+                                       k=16, width=64, pack_bits=8)
+    assert ("default",) in configs       # adaptive tiling always runs
+    assert (8, 256, 128) in configs
+    assert (8, 2 ** 19, 128) not in configs
+    (rec,) = skipped
+    assert rec["config"] == f"tb=8,tn={2 ** 19},kp=128"
+    assert rec["vmem_bytes"] > rec["budget_bytes"]
+    assert "exceeds" in rec["reason"]
+
+
+def test_autotune_sweep_skips_overflowing_config_end_to_end():
+    """The acceptance check: a deliberately VMEM-overflowing tile config
+    in the sweep grid is provably skipped -- recorded, never timed."""
+    at = _autotune()
+    rows, crossover, skipped = at.sweep(
+        ns=(512,), tile_bs=(8,), tile_ns=(256, 2 ** 19), k_pads=(128,),
+        B=4, D=16, k=16, iters=1)
+    bad = f"tb=8,tn={2 ** 19},kp=128"
+    assert bad in {s["config"] for s in skipped}
+    assert bad not in {r["config"] for r in rows}
+    # the surviving grid still timed dense + default + the fitting config
+    assert {"dense", "default", "tb=8,tn=256,kp=128"} <= \
+        {r["config"] for r in rows}
