@@ -142,6 +142,55 @@ def run():
         np.testing.assert_array_equal(np.asarray(getattr(res_dense, key)),
                                       np.asarray(getattr(res_fused, key)))
 
+    # multi-tenant serving (PR 9): B queries spread over T stacked stores,
+    # ONE coalesced vmapped search_tenants call vs T sequential solo
+    # engine.search calls over the same queries -- the coalesced path must
+    # be bit-identical per query and is the one the TenantServer shell
+    # batches into. Stores are small (serving-shaped: many tenants, few
+    # rows each); the signal is the per-T scaling of coalesced dispatch
+    # overhead vs the sequential python loop, not absolute wall-time.
+    from repro.engine import TenantStore
+    t_cap, t_dim = 64, 16
+    tcfg = SearchConfig("mtmc", cl=8, mode="avss", use_kernel="ref")
+    treq = SearchRequest(mode="two_phase", k=8)
+    teng = RetrievalEngine(tcfg)
+    f_co = jax.jit(lambda ts, q, i: teng.search_tenants(ts, q, i, treq))
+    for T in (1, 8, 64):
+        tstores = [MemoryStore.from_quantized(
+            jax.random.randint(jax.random.PRNGKey(10 + t), (t_cap, t_dim),
+                               0, tcfg.enc.levels),
+            jax.random.randint(jax.random.PRNGKey(200 + t), (t_cap,),
+                               0, 16), tcfg) for t in range(T)]
+        tts = TenantStore.stack(tstores)
+        tq = jax.random.randint(jax.random.PRNGKey(300 + T), (B, t_dim),
+                                0, 4)
+        tids = jax.random.randint(jax.random.PRNGKey(400 + T), (B,), 0, T)
+        us_co, res_co = time_us(f_co, tts, tq, tids, iters=3)
+        rows.append((f"engine/tenants_coalesced_T{T}", us_co,
+                     qps(us_co) + f";tenants={T}"))
+
+        # sequential: one solo search per tenant group (what serving
+        # without the stack would do) -- parity-asserted against the
+        # coalesced rows, timing includes the per-tenant dispatch loop
+        tid_np = np.asarray(tids)
+        groups = [(t, np.where(tid_np == t)[0]) for t in range(T)
+                  if (tid_np == t).any()]
+        f_solo = jax.jit(lambda st, q, e=teng: e.search(st, q, treq))
+
+        def seq(ts_q=tq, gs=groups, sts=tstores):
+            out = [f_solo(sts[t], ts_q[jnp.asarray(sel)]) for t, sel in gs]
+            jax.block_until_ready(out)
+            return out
+
+        us_seq, res_seq = time_us(seq, iters=3)
+        rows.append((f"engine/tenants_sequential_T{T}", us_seq,
+                     qps(us_seq)
+                     + f";coalesced_speedup={us_seq / us_co:.1f}x"))
+        for (t, sel), solo in zip(groups, res_seq):
+            np.testing.assert_array_equal(
+                np.asarray(res_co.labels[jnp.asarray(sel)]),
+                np.asarray(solo.labels))
+
     # two-phase recall@k of the 1-NN decision vs the full search
     from repro.core import avss as avss_lib
     full = eng_ref.full(qv, sv)

@@ -114,6 +114,20 @@ def check_no_f64(hlo: str) -> list[str]:
     return matched_lines(hlo, (F64_TYPE_TAG,))
 
 
+def check_single_jit_entry_across_tenants(entries) -> list[str]:
+    """ONE compiled search program serves any tenant count (PR 9).
+
+    `entries` maps tenant count T -> jit cache entries added by repeated
+    `search_tenants` calls at that T (fresh stores / queries / tenant_ids
+    each call, same shapes). The multi-tenant contract is exactly one
+    entry per T: a second entry at any T means something per-tenant or
+    per-write leaked into the trace (e.g. a python-level branch on tenant
+    data) and every tenant would pay its own compile again."""
+    return [f"tenant count {t}: {n} jit cache entries added "
+            f"(expected exactly 1)"
+            for t, n in sorted(entries.items()) if n != 1]
+
+
 # -- assert wrappers (the test-suite surface) -------------------------------
 
 
@@ -152,3 +166,8 @@ def assert_fused_tag(hlo: str, expected: bool) -> None:
 
 def assert_no_f64(hlo: str) -> None:
     _raise(check_no_f64(hlo), "f64 promotion in compiled HLO")
+
+
+def assert_single_jit_entry_across_tenants(entries) -> None:
+    _raise(check_single_jit_entry_across_tenants(entries),
+           "multi-tenant search retraced per tenant count")

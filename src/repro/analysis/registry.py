@@ -7,6 +7,13 @@ config matrix:
   engine.search      mode (full/two_phase/ideal) x backend (ref/mxu/fused)
                      x sharded/unsharded x packed/unpacked operand
                      x fused_min_rows (forcing both sides of the dispatch)
+  engine.search_tenants
+                     the vmapped multi-tenant dispatch (PR 9) over a
+                     ragged 5-tenant stack: same fused/layout/f64
+                     invariants as engine.search, plus zero collectives
+                     on the tenant axis and the
+                     single_jit_entry_across_tenants cache invariant
+                     for T in {1, 5, 64}
   MemoryStore.write  scatter path (unsharded / 1-shard) vs shard-local
                      write-through (multi-shard)
   episode_votes      the differentiable training twin of search
@@ -103,6 +110,9 @@ INVARIANTS: dict[str, Callable[[dict], list[str]]] = {
     "no_f64_promotion": lambda a: hc.check_no_f64(a["hlo"]),
     "hbm_buffer_bound": _inv_hbm_buffer_bound,
     "single_jit_cache_entry_per_request_family": _inv_jit_cache,
+    "single_jit_entry_across_tenants":
+        lambda a: hc.check_single_jit_entry_across_tenants(
+            a["cache_sizes"]),
 }
 
 
@@ -132,6 +142,41 @@ def _fix():
     wstore = MemoryStore.create(mcfg).calibrate(wvecs)
     return {"cfg": cfg, "store": store, "qv": qv,
             "mcfg": mcfg, "wstore": wstore, "wvecs": wvecs, "wlabs": wlabs}
+
+
+@functools.lru_cache(maxsize=None)
+def _tenant_fix():
+    """Ragged 5-tenant stack mirroring the tests/test_tenant.py geometry:
+    one empty tenant (calibrated, never written), one tie-heavy tenant,
+    masked label -1 rows, plus an interleaved query batch with repeated
+    tenants (so the rank-keyed noise coordinates differ from the batch
+    positions the solo search would use)."""
+    import numpy as np
+
+    from repro.core.avss import SearchConfig
+    from repro.core.memory import MemoryConfig
+    from repro.engine import MemoryStore, TenantStore
+
+    cfg = SearchConfig("mtmc", cl=8, mode="avss", use_kernel="ref")
+    rng = np.random.default_rng(0)
+    stores = []
+    for i, cap in enumerate((12, 7, 16, 5, 9)):
+        if i == 3:                                      # empty tenant
+            mc = MemoryConfig(capacity=cap, dim=20, search=cfg)
+            sample = jnp.asarray(rng.normal(size=(8, 20)), jnp.float32)
+            stores.append(MemoryStore.create(mc).calibrate(sample))
+            continue
+        v = rng.integers(0, cfg.enc.levels, size=(cap, 20))
+        if i == 2:                                      # tie-heavy
+            v = np.concatenate([v[:4]] * 4)[:cap]
+        lab = rng.integers(0, 5, size=(cap,))
+        lab[::4] = -1                                   # masked rows
+        stores.append(MemoryStore.from_quantized(
+            jnp.asarray(v), jnp.asarray(lab), cfg))
+    tstore = TenantStore.stack(stores)
+    tids = jnp.array([0, 2, 1, 0, 2, 4, 2, 3, 0], jnp.int32)
+    qv = jnp.asarray(rng.integers(0, 4, size=(9, 20)), jnp.int32)
+    return {"cfg": cfg, "tstore": tstore, "qv": qv, "tids": tids}
 
 
 def _compile(fn, *args, mesh=None):
@@ -217,6 +262,84 @@ def _hbm_stats(compiled, B: int, k: int, N: int, d: int) -> dict:
     measured = cost_lib.temp_bytes(compiled)
     return {"measured_bytes": measured, "bound_bytes": bound,
             "strict": jax.default_backend() == "tpu"}
+
+
+def _tenant_search_cell(mode: str, backend: str, fmr: int,
+                        packed: bool) -> Cell:
+    from repro.engine import RetrievalEngine, SearchRequest
+
+    def build() -> dict:
+        fx = _tenant_fix()
+        tstore, qv, tids = fx["tstore"], fx["qv"], fx["tids"]
+        if not packed:
+            tstore = _unpacked(tstore)
+        eng = RetrievalEngine(fx["cfg"], backend=backend)
+        req = SearchRequest(mode=mode, k=CELL_K, fused_min_rows=fmr)
+        compiled = _compile(
+            lambda ts, q, i: eng.search_tenants(ts, q, i, req).votes,
+            tstore, qv, tids)
+        # the per-query vmapped search sees every tenant at the PADDED
+        # row count -- that is the rows_loc the dispatch rule acts on
+        return {"hlo": compiled.as_text(), "compiled": compiled,
+                "expect_fused": _expect_fused(backend, tstore.n_pad,
+                                              mode, fmr)}
+
+    # the tenant axis is a pure batch axis: beyond the solo-search
+    # invariants, the vmapped program must introduce ZERO collectives
+    return Cell(entry="engine.search_tenants",
+                config={"mode": mode, "backend": backend, "packed": packed,
+                        "fused_min_rows": fmr},
+                invariants=("fused_tag_iff_dispatch_rule", "no_layout_ops",
+                            "no_f64_promotion", "no_collectives"),
+                build=build)
+
+
+def _tenant_jit_cache_cell() -> Cell:
+    def build() -> dict:
+        from functools import partial
+
+        from repro.engine import (MemoryStore, RetrievalEngine,
+                                  SearchRequest, TenantStore)
+        fx = _tenant_fix()
+        eng = RetrievalEngine(fx["cfg"])
+
+        @partial(jax.jit, static_argnames=("req",))
+        def f(ts, q, tids, req):
+            return eng.search_tenants(ts, q, tids, req).votes
+
+        req = SearchRequest(mode="two_phase", k=4)
+
+        def mk_stack(T: int, seed: int):
+            import numpy as np
+            r = np.random.default_rng(seed)
+            return TenantStore.stack([
+                MemoryStore.from_quantized(
+                    jnp.asarray(r.integers(0, fx["cfg"].enc.levels,
+                                           size=(6, 8))),
+                    jnp.asarray(r.integers(0, 3, size=(6,))), fx["cfg"])
+                for _ in range(T)])
+
+        # per tenant count T: fresh stores / queries / tenant_ids of the
+        # same shapes must all hit ONE compiled program
+        entries: dict[int, int] = {}
+        for T in (1, 5, 64):
+            before = int(f._cache_size())
+            for trial in range(2):
+                import numpy as np
+                r = np.random.default_rng(100 * T + trial)
+                ts = mk_stack(T, seed=T + trial)
+                q = jnp.asarray(r.integers(0, 4, size=(4, 8)), jnp.int32)
+                tids = jnp.asarray(r.integers(0, T, size=(4,)), jnp.int32)
+                f(ts, q, tids, req).block_until_ready()
+            entries[T] = int(f._cache_size()) - before
+        return {"cache_sizes": entries,
+                "cache_size": sum(entries.values()),   # resource row: one
+                "expected": len(entries)}              # entry per T shape
+
+    return Cell(entry="engine.search_tenants",
+                config={"check": "jit cache across tenant counts"},
+                invariants=("single_jit_entry_across_tenants",),
+                build=build)
 
 
 def _write_cell(kind: str, n_shards: int) -> Cell:
@@ -336,6 +459,22 @@ def build_cells() -> list[Cell]:
                                       n_shards))
         cells.append(_search_cell(mode, "fused", FMR_FORCE_DENSE, False,
                                   True, n_shards))
+
+    # engine.search_tenants: the vmapped multi-tenant dispatch (PR 9) --
+    # one cell per representative route (full dense x ref/mxu, two-phase
+    # on both sides of the fused threshold, fused ideal packed + unpacked)
+    # plus the cross-tenant-count jit cache cell
+    cells.append(_tenant_search_cell("full", "ref", FMR_FORCE_FUSED, True))
+    cells.append(_tenant_search_cell("full", "mxu", FMR_FORCE_FUSED, True))
+    cells.append(_tenant_search_cell("two_phase", "mxu", FMR_FORCE_DENSE,
+                                     True))
+    cells.append(_tenant_search_cell("two_phase", "fused", FMR_FORCE_FUSED,
+                                     True))
+    cells.append(_tenant_search_cell("ideal", "fused", FMR_FORCE_FUSED,
+                                     True))
+    cells.append(_tenant_search_cell("ideal", "fused", FMR_FORCE_FUSED,
+                                     False))
+    cells.append(_tenant_jit_cache_cell())
 
     # MemoryStore.write: scatter vs write-through per n_shards
     cells.append(_write_cell("unsharded", 1))

@@ -17,6 +17,11 @@ The serving contract (PR 2) is store-centric:
                        `two_phase`, `sharded_two_phase`) remain underneath
                        for callers without a store; all paths are
                        bit-identical (tests/test_engine.py).
+  TenantStore          N per-tenant stores stacked along a leading tenant
+                       axis, searched in one coalesced device batch through
+                       `RetrievalEngine.search_tenants` (PR 9) -- one jit
+                       cache entry for ANY tenant count, per-tenant results
+                       bit-identical to solo `search` (tests/test_tenant.py).
 """
 
 from repro.engine.api import SearchRequest, SearchResult
@@ -26,6 +31,7 @@ from repro.engine.engine import IDEAL_FUSED_MIN_ROWS, RetrievalEngine
 from repro.engine.sharded import (sharded_ideal_search,
                                   sharded_two_phase_search)
 from repro.engine.store import MemoryStore
+from repro.engine.tenant import TenantStore, tenant_query_rank
 
 __all__ = [
     "BACKENDS",
@@ -34,8 +40,10 @@ __all__ = [
     "RetrievalEngine",
     "SearchRequest",
     "SearchResult",
+    "TenantStore",
     "kernels_available",
     "resolve_backend",
     "sharded_ideal_search",
     "sharded_two_phase_search",
+    "tenant_query_rank",
 ]

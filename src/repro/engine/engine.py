@@ -44,6 +44,7 @@ if TYPE_CHECKING:
     from jax.sharding import Mesh
 
     from repro.engine.store import MemoryStore
+    from repro.engine.tenant import TenantStore
 
 
 def _noise_stream(key: jax.Array | int | None) -> jax.Array | None:
@@ -175,41 +176,57 @@ class RetrievalEngine:
         valid = store.valid
         iters = eng._iterations(q.shape[-1])
 
-        if store.mesh is not None and req.mode != "full":
-            # per-shard shortlists share the unsharded dispatch rule: the
-            # fused Pallas kernel engages once a shard's LOCAL rows reach
-            # the threshold (engine/sharded._use_fused)
-            axes = req.axes if req.axes is not None else store.axes
-            fmr = eng._fused_threshold(req)
-            backend = eng.resolved_backend
-            if req.mode == "two_phase":
-                from repro.engine import sharded
-                res = sharded.sharded_two_phase_search(
-                    q, store.values, eng.cfg, store.mesh, axes=axes,
-                    k=req.k, valid=valid, labels=store.labels,
-                    s_grid=store.s_grid, proj=store.proj,
-                    packed=store.proj_packed, pack_bits=store.pack_bits,
-                    backend=backend, fused_min_rows=fmr)
-                # labels come from the per-shard fold (-1 on empty/pad
-                # rows): mask their votes without any global gather
-                votes = jnp.where(res["labels"] >= 0, res["votes"],
-                                  -jnp.inf)
-                return SearchResult(votes, res["dist"], res["indices"],
-                                    res["labels"], res["iterations"])
-            from repro.engine import sharded
-            from repro.kernels import ops as kernel_ops
-            q1h = kernel_ops.query_onehot(q, jnp.float32)
-            res = sharded.sharded_ideal_search(
-                q1h, store.proj, store.labels, store.mesh, axes=axes,
-                k=req.k, backend=backend, fused_min_rows=fmr,
-                packed=store.proj_packed, pack_bits=store.pack_bits,
-                enc=eng.cfg.enc)
-            votes = jnp.where(res["labels"] >= 0, res["votes"], -jnp.inf)
-            return SearchResult(votes, res["dist"], res["indices"],
-                                res["labels"], iters)
+        if store.mesh is None or req.mode == "full":
+            return eng._search_unsharded(store, q, req)
 
+        # per-shard shortlists share the unsharded dispatch rule: the
+        # fused Pallas kernel engages once a shard's LOCAL rows reach
+        # the threshold (engine/sharded._use_fused)
+        axes = req.axes if req.axes is not None else store.axes
+        fmr = eng._fused_threshold(req)
+        backend = eng.resolved_backend
+        if req.mode == "two_phase":
+            from repro.engine import sharded
+            res = sharded.sharded_two_phase_search(
+                q, store.values, eng.cfg, store.mesh, axes=axes,
+                k=req.k, valid=valid, labels=store.labels,
+                s_grid=store.s_grid, proj=store.proj,
+                packed=store.proj_packed, pack_bits=store.pack_bits,
+                backend=backend, fused_min_rows=fmr)
+            # labels come from the per-shard fold (-1 on empty/pad
+            # rows): mask their votes without any global gather
+            votes = jnp.where(res["labels"] >= 0, res["votes"],
+                              -jnp.inf)
+            return SearchResult(votes, res["dist"], res["indices"],
+                                res["labels"], res["iterations"])
+        from repro.engine import sharded
+        from repro.kernels import ops as kernel_ops
+        q1h = kernel_ops.query_onehot(q, jnp.float32)
+        res = sharded.sharded_ideal_search(
+            q1h, store.proj, store.labels, store.mesh, axes=axes,
+            k=req.k, backend=backend, fused_min_rows=fmr,
+            packed=store.proj_packed, pack_bits=store.pack_bits,
+            enc=eng.cfg.enc)
+        votes = jnp.where(res["labels"] >= 0, res["votes"], -jnp.inf)
+        return SearchResult(votes, res["dist"], res["indices"],
+                            res["labels"], iters)
+
+    def _search_unsharded(self, store: MemoryStore, q: jax.Array,
+                          req: SearchRequest,
+                          noise_qidx: jax.Array | None = None
+                          ) -> SearchResult:
+        """The unsharded (single-block) search body shared by `search` and
+        `search_tenants`: `self` must already carry the request's backend
+        and noisy overrides, `q` is already quantized. `noise_qidx` (B,)
+        overrides the per-query noise coordinates (see `full`); `search`
+        leaves it None (arange(B)), `search_tenants` passes each query's
+        rank within its tenant group so the vmapped dispatch is
+        bit-identical to per-tenant solo calls."""
+        valid = store.valid
+        iters = self._iterations(q.shape[-1])
         if req.mode == "full":
-            res = eng.full(q, store.values, s_grid=store.s_grid)
+            res = self.full(q, store.values, s_grid=store.s_grid,
+                            noise_qidx=noise_qidx)
             votes = jnp.where(valid[None, :], res["votes"], -jnp.inf)
             indices = jnp.broadcast_to(
                 jnp.arange(store.capacity, dtype=jnp.int32), votes.shape)
@@ -217,11 +234,12 @@ class RetrievalEngine:
             return SearchResult(votes, res["dist"], indices, labels,
                                 res["iterations"])
         if req.mode == "two_phase":
-            res = eng.two_phase(q, store.values, k=req.k, valid=valid,
-                                s_grid=store.s_grid, proj=store.proj,
-                                packed=store.proj_packed,
-                                pack_bits=store.pack_bits,
-                                fused_min_rows=eng._fused_threshold(req))
+            res = self.two_phase(q, store.values, k=req.k, valid=valid,
+                                 s_grid=store.s_grid, proj=store.proj,
+                                 packed=store.proj_packed,
+                                 pack_bits=store.pack_bits,
+                                 fused_min_rows=self._fused_threshold(req),
+                                 noise_qidx=noise_qidx)
             labels = store.labels[res["indices"]]      # -1 on empty slots
             votes = jnp.where(labels >= 0, res["votes"], -jnp.inf)
             return SearchResult(votes, res["dist"], res["indices"], labels,
@@ -235,11 +253,11 @@ class RetrievalEngine:
         # the ref backend keep the dense matmul as the readable reference.
         from repro.kernels import ops as kernel_ops
         k = min(req.k, store.capacity)
-        backend = eng.resolved_backend
-        if backend != "ref" and (store.capacity >= eng._fused_threshold(req)
+        backend = self.resolved_backend
+        if backend != "ref" and (store.capacity >= self._fused_threshold(req)
                                  or backend == "fused"):
             dist, idx = kernel_ops.lut_shortlist(
-                q, store.values, eng.cfg.enc, k, valid=valid,
+                q, store.values, self.cfg.enc, k, valid=valid,
                 proj=store.proj, packed=store.proj_packed,
                 pack_bits=store.pack_bits)
         else:
@@ -251,6 +269,71 @@ class RetrievalEngine:
         labels = store.labels[idx]
         votes = jnp.where(labels >= 0, -dist, -jnp.inf)
         return SearchResult(votes, dist, idx, labels, iters)
+
+    # -- multi-tenant dispatch ---------------------------------------------
+
+    def search_tenants(self, tstore: TenantStore, queries: jax.Array,
+                       tenant_ids: jax.Array,
+                       request: SearchRequest | None = None) -> SearchResult:
+        """One compiled search over a batch of queries from MANY tenants.
+
+        tstore:     repro.engine.tenant.TenantStore -- N per-tenant
+                    MemoryStores stacked along a leading tenant axis.
+        queries:    (B, dim) float embeddings (quantized per query against
+                    the OWNING tenant's calibrated range) or pre-quantized
+                    ints (passed through).
+        tenant_ids: (B,) int -- the owning tenant of each query. Traced
+                    data, NOT static: batches with different tenant mixes
+                    hit the same compiled program (one jit cache entry per
+                    tenant count/batch shape, asserted by the
+                    `single_jit_entry_across_tenants` contract cell).
+        request:    SearchRequest; `mode`/`backend`/`k`/`fused_min_rows`/
+                    `noisy` all apply (axes is meaningless here -- tenant
+                    stacks are unsharded).
+
+        Dispatch: gather each query's tenant leaves out of the stacked
+        store and vmap the single-query unsharded search over the batch --
+        full/two_phase/ideal x ref/mxu/fused (the Pallas kernels batch
+        under vmap), bit-identical per tenant to solo `engine.search` on
+        `tstore.tenant(i)` for queries grouped in batch order (the noise
+        coordinates are each query's rank within its tenant group, exactly
+        the solo batch positions; tests/test_tenant.py). Results span the
+        stack's padded capacity: a ragged tenant's pad rows behave like
+        never-written slots (-inf votes, label -1, mask penalty).
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core.avss import SearchConfig
+        >>> from repro.engine import (MemoryStore, RetrievalEngine,
+        ...                           SearchRequest, TenantStore)
+        >>> cfg = SearchConfig("mtmc", cl=4, mode="avss", use_kernel="ref")
+        >>> a = MemoryStore.from_quantized(
+        ...     jnp.array([[0, 3], [9, 7]]), jnp.array([1, 2]), cfg)
+        >>> b = MemoryStore.from_quantized(
+        ...     jnp.array([[5, 5]]), jnp.array([7]), cfg)
+        >>> res = RetrievalEngine(cfg).search_tenants(
+        ...     TenantStore.stack([a, b]), jnp.array([[3, 2], [3, 2]]),
+        ...     jnp.array([0, 1]), SearchRequest(mode="ideal", k=1))
+        >>> res.predict().tolist()     # same query, per-tenant answers
+        [2, 7]
+        """
+        from repro.engine import tenant as tenant_lib
+        req = request if request is not None else SearchRequest()
+        eng = self.with_backend(req.backend).with_noisy(req.noisy)
+        tenant_ids = jnp.asarray(tenant_ids).astype(jnp.int32)
+        q = tstore.quantize_queries(queries, tenant_ids)
+        rank = tenant_lib.tenant_query_rank(tenant_ids)
+        view = tstore.query_view(tenant_ids)
+
+        def one(store_b: MemoryStore, q_b: jax.Array,
+                rank_b: jax.Array) -> SearchResult:
+            return eng._search_unsharded(store_b, q_b[None], req,
+                                         noise_qidx=rank_b[None])
+
+        res = jax.vmap(one)(view, q, rank)
+        # drop the inner singleton query axis: (B, 1, K) -> (B, K)
+        return SearchResult(res.votes[:, 0], res.dist[:, 0],
+                            res.indices[:, 0], res.labels[:, 0],
+                            res.iterations)
 
     # -- differentiable episodic forward (hardware-aware training) ---------
 
@@ -372,29 +455,36 @@ class RetrievalEngine:
     # -- full exact search -------------------------------------------------
 
     def full(self, q_values: jax.Array, s_values: jax.Array, *,
-             s_grid: jax.Array | None = None) -> dict[str, jax.Array]:
+             s_grid: jax.Array | None = None,
+             noise_qidx: jax.Array | None = None) -> dict[str, jax.Array]:
         """Exact noisy MCAM search of every store row.
 
         q_values: (B, d) ints -- in [0, 4) for AVSS, [0, levels) for SVSS.
         s_values: (N, d) ints in [0, levels).
         s_grid:   optional write-time string grid (MemoryStore.s_grid);
                   when omitted the layout is computed here, read-time.
+        noise_qidx: optional (B,) per-query noise coordinates (default
+                  arange(B), the batch position). `search_tenants` passes
+                  each query's rank within its tenant group so batched and
+                  solo noisy searches agree bit-for-bit.
         Returns {votes (B, N), dist (B, N), iterations}.
         """
         cfg = self.cfg
         q_grid, s_grid, weights, thresholds = self._grids(q_values, s_values,
                                                           s_grid)
+        if noise_qidx is None:
+            noise_qidx = jnp.arange(q_grid.shape[0], dtype=jnp.uint32)
         if self.resolved_backend == "ref":
             fn = partial(avss_lib._search_one_query, weights=weights,
                          cfg=cfg, thresholds=thresholds)
-            qidx = jnp.arange(q_grid.shape[0], dtype=jnp.uint32)
             votes, dist = jax.lax.map(
-                lambda args: fn(args[0], s_grid, args[1]), (q_grid, qidx),
+                lambda args: fn(args[0], s_grid, args[1]),
+                (q_grid, noise_qidx.astype(jnp.uint32)),
                 batch_size=min(cfg.query_chunk, q_grid.shape[0]))
         else:  # pallas / mxu / fused all use the fused VPU search kernel
             from repro.kernels import ops as kernel_ops
             votes, dist = kernel_ops.mcam_search(
-                q_grid, s_grid, weights, cfg, thresholds)
+                q_grid, s_grid, weights, cfg, thresholds, qidx=noise_qidx)
         return {"votes": votes, "dist": dist,
                 "iterations": self._iterations(q_values.shape[-1])}
 
@@ -469,7 +559,8 @@ class RetrievalEngine:
                   proj: jax.Array | None = None,
                   packed: jax.Array | None = None,
                   pack_bits: int | None = None,
-                  fused_min_rows: int | None = None
+                  fused_min_rows: int | None = None,
+                  noise_qidx: jax.Array | None = None
                   ) -> dict[str, jax.Array]:
         """Shortlist + exact noisy rescore (beyond-paper TPU pipeline).
 
@@ -477,6 +568,8 @@ class RetrievalEngine:
         omitted -> recomputed here, read-time, with identical results.
         fused_min_rows: phase-1 fused-kernel threshold override (see
         `shortlist`); None defers to the engine's field.
+        noise_qidx: optional (B,) per-query noise coordinates for the
+        rescore (see `full`); default arange(B).
         Returns {votes (B, k), dist (B, k) ideal shortlist distances
         (masked rows carry the mask penalty), indices (B, k) global support
         rows, iterations}. Votes are bit-identical to `full` for every
@@ -491,7 +584,8 @@ class RetrievalEngine:
         q_grid, s_grid, weights, thresholds = self._grids(q_values, s_values,
                                                           s_grid)
         votes = kernel_ops.rescore_shortlist(
-            q_grid, s_grid, idx, weights, cfg, thresholds)
+            q_grid, s_grid, idx, weights, cfg, thresholds,
+            noise_qidx=noise_qidx)
         return {"votes": votes, "dist": dist, "indices": idx,
                 "iterations": self._iterations(q_values.shape[-1])}
 

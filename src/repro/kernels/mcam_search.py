@@ -34,13 +34,14 @@ DEFAULT_TILE_B = 8
 DEFAULT_TILE_N = 128
 
 
-def _search_kernel(q_ref, s_ref, w_ref, th_ref, votes_ref, dist_ref, *,
-                   cfg: MCAMConfig, noisy: bool, S: int, sl: int,
-                   tile_b: int, tile_n: int):
-    bi = pl.program_id(0)
+def _search_kernel(q_ref, s_ref, w_ref, th_ref, qidx_ref, votes_ref,
+                   dist_ref, *, cfg: MCAMConfig, noisy: bool, S: int,
+                   sl: int, tile_b: int, tile_n: int):
     ni = pl.program_id(1)
-    b_abs = (bi * tile_b
-             + jax.lax.broadcasted_iota(jnp.uint32, (tile_b, 1), 0))
+    # per-query noise coordinate: an explicit input rather than the tile's
+    # batch position, so a caller batching queries from INDEPENDENT stores
+    # (engine.search_tenants) can reproduce each query's solo coordinates
+    b_abs = qidx_ref[...].astype(jnp.uint32)[:, None]       # (tile_b, 1)
     n_abs = (ni * tile_n
              + jax.lax.broadcasted_iota(jnp.uint32, (1, tile_n), 1))
     cell = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, sl), 2)
@@ -80,6 +81,7 @@ def _search_kernel(q_ref, s_ref, w_ref, th_ref, votes_ref, dist_ref, *,
 def mcam_search_pallas(q_strings: jax.Array, s_strings: jax.Array,
                        weights: jax.Array, thresholds: jax.Array,
                        cfg: MCAMConfig, *, noisy: bool = True,
+                       qidx: jax.Array | None = None,
                        tile_b: int = DEFAULT_TILE_B,
                        tile_n: int = DEFAULT_TILE_N,
                        interpret: bool | None = None
@@ -87,10 +89,16 @@ def mcam_search_pallas(q_strings: jax.Array, s_strings: jax.Array,
     """q (B, S, sl) int8, s (N, S, sl) int8 -> votes (B, N), dist (B, N).
 
     B and N must be multiples of the tile sizes (ops.py pads).
+    qidx: optional (B,) uint32 per-query noise coordinates; default
+    arange(B) -- the historical batch-position coordinate, bit-identical
+    to the pre-parameter kernel.
     """
     B, S, sl = q_strings.shape
     N = s_strings.shape[0]
     assert B % tile_b == 0 and N % tile_n == 0, (B, N, tile_b, tile_n)
+    if qidx is None:
+        qidx = jnp.arange(B, dtype=jnp.uint32)
+    assert qidx.shape == (B,), (qidx.shape, B)
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     grid = (B // tile_b, N // tile_n)
@@ -106,6 +114,7 @@ def mcam_search_pallas(q_strings: jax.Array, s_strings: jax.Array,
             pl.BlockSpec((tile_n, S, sl), lambda i, j: (j, 0, 0)),
             pl.BlockSpec((S,), lambda i, j: (0,)),
             pl.BlockSpec(thresholds.shape, lambda i, j: (0,)),
+            pl.BlockSpec((tile_b,), lambda i, j: (i,)),
         ],
         out_specs=[
             pl.BlockSpec((tile_b, tile_n), lambda i, j: (i, j)),
@@ -113,5 +122,6 @@ def mcam_search_pallas(q_strings: jax.Array, s_strings: jax.Array,
         ],
         out_shape=out_shape,
         interpret=interpret,
-    )(q_strings, s_strings, weights, thresholds)
+    )(q_strings, s_strings, weights, thresholds,
+      qidx.astype(jnp.uint32))
     return votes, dist

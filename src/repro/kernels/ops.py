@@ -54,21 +54,31 @@ def broadcast_query(q_grid: jax.Array, L: int) -> jax.Array:
 
 
 def mcam_search(q_grid: jax.Array, s_grid: jax.Array, weights: jax.Array,
-                cfg, thresholds: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Drop-in kernel backend for repro.core.avss.search_quantized."""
+                cfg, thresholds: jax.Array,
+                qidx: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Drop-in kernel backend for repro.core.avss.search_quantized.
+
+    qidx: optional (B,) per-query noise coordinates (default arange(B)).
+    `engine.search_tenants` passes each query's rank within its tenant
+    group, so batched-across-tenants noise is bit-identical to solo calls.
+    """
     L = s_grid.shape[2]
     seg = s_grid.shape[1]
     q = flatten_strings(broadcast_query(q_grid, L)).astype(jnp.int8)
     s = flatten_strings(s_grid).astype(jnp.int8)
     w_flat = jnp.tile(weights.astype(jnp.float32), seg)
     B, N = q.shape[0], s.shape[0]
+    if qidx is None:
+        qidx = jnp.arange(B, dtype=jnp.uint32)
     tb = min(mcam_search_tile_b(), max(B, 1))
     tn = min(mcam_search_tile_n(), max(N, 1))
     qp = _pad_to(q, 0, tb)
     sp = _pad_to(s, 0, tn)
     votes, dist = mcam_search_kernel.mcam_search_pallas(
         qp, sp, w_flat, thresholds.astype(jnp.float32), cfg.mcam,
-        noisy=cfg.noisy, tile_b=tb, tile_n=tn)
+        noisy=cfg.noisy, qidx=_pad_to(qidx.astype(jnp.uint32), 0, tb),
+        tile_b=tb, tile_n=tn)
     return votes[:B, :N], dist[:B, :N]
 
 
@@ -176,7 +186,8 @@ def avss_ideal_dist(q_values: jax.Array, s_values: jax.Array, enc: Encoding,
 def rescore_shortlist(q_grid: jax.Array, s_grid: jax.Array,
                       short_idx: jax.Array, weights: jax.Array,
                       cfg, thresholds: jax.Array, *,
-                      noise_idx: jax.Array | None = None) -> jax.Array:
+                      noise_idx: jax.Array | None = None,
+                      noise_qidx: jax.Array | None = None) -> jax.Array:
     """Exact noisy votes for per-query shortlists.
 
     q_grid (B, seg, Lq, sl); s_grid (N, seg, L, sl); short_idx (B, K).
@@ -185,6 +196,10 @@ def rescore_shortlist(q_grid: jax.Array, s_grid: jax.Array,
     the store, pass `noise_idx` (B, K) with the global row of each
     candidate while `short_idx` stays shard-local -- this is what makes the
     sharded two-phase search bit-identical to the single-device one.
+    `noise_qidx` (B,) is the query-side twin: the noise coordinate of each
+    query (default arange(B), the batch position). `engine.search_tenants`
+    passes each query's rank within its tenant group, so a batch mixing
+    tenants rescores bit-identically to per-tenant solo calls.
     Returns votes (B, K).
     """
     L = s_grid.shape[2]
@@ -196,9 +211,11 @@ def rescore_shortlist(q_grid: jax.Array, s_grid: jax.Array,
     m = m.astype(jnp.float32)                              # (B, K, S, sl)
     if noise_idx is None:
         noise_idx = short_idx
+    if noise_qidx is None:
+        noise_qidx = jnp.arange(B, dtype=jnp.uint32)
     string_id = (noise_idx.astype(jnp.uint32)[..., None] * jnp.uint32(S)
                  + jnp.arange(S, dtype=jnp.uint32)[None, None, :])
-    b_idx = jnp.arange(B, dtype=jnp.uint32)[:, None, None]
+    b_idx = noise_qidx.astype(jnp.uint32)[:, None, None]
     mc = cfg.mcam
     if cfg.noisy:
         cell = jnp.arange(sl, dtype=jnp.uint32)

@@ -3,9 +3,10 @@
 Two checks keep the new docs surface from rotting:
 
 * doctests on the public API (`engine/api.py`, `engine/store.py`,
-  `engine/engine.py`, `kernels/shortlist.py`, and since ISSUE 5 the
-  trainer surface `core/hat.py` + `launch/steps.py`) -- the same modules
-  CI also runs through `pytest --doctest-modules`;
+  `engine/engine.py`, `kernels/shortlist.py`, since ISSUE 5 the trainer
+  surface `core/hat.py` + `launch/steps.py`, and since ISSUE 9 the
+  multi-tenant surface `engine/tenant.py`) -- the same modules CI also
+  runs through `pytest --doctest-modules`;
 * extract-and-run over every ```python block in README.md and docs/*.md
   (blocks in one file share a namespace, so a later block may build on an
   earlier one; shell examples use ```bash fences and are not executed).
@@ -20,8 +21,9 @@ import pytest
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 PUBLIC_MODULES = ("repro.engine.api", "repro.engine.store",
-                  "repro.engine.engine", "repro.kernels.shortlist",
-                  "repro.core.hat", "repro.launch.steps")
+                  "repro.engine.engine", "repro.engine.tenant",
+                  "repro.kernels.shortlist", "repro.core.hat",
+                  "repro.launch.steps")
 
 
 @pytest.mark.parametrize("modname", PUBLIC_MODULES)
