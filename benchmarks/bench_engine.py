@@ -19,15 +19,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from benchmarks.common import time_us
+from benchmarks.common import time_percentiles
 from repro.core.avss import SearchConfig
 from repro.core.mcam import MCAMConfig
 from repro.core.memory import MemoryConfig
 from repro.engine import (MemoryStore, RetrievalEngine, SearchRequest)
-from repro.engine.engine import IDEAL_FUSED_MIN_ROWS
 
+# PINNED to the acceptance shape of the PR-5/6 shortlist baselines
+# (BENCH_shortlist.json compares against rows at this exact N) -- do NOT
+# follow IDEAL_FUSED_MIN_ROWS, which dropped to its measured crossover
+# (1024) in PR 10 and is a dispatch knob, not a benchmark shape.
+N_IDEAL = 4096
 N, B, D, K = 2048, 16, 48, 64
-N_IDEAL = IDEAL_FUSED_MIN_ROWS       # large-N ideal path (4096)
 W = 256                              # streaming-write batch rows
 
 
@@ -45,17 +48,21 @@ def run():
     # full exact search (reference backend)
     eng_ref = RetrievalEngine(cfg, backend="ref")
     f_full = jax.jit(lambda q, s: eng_ref.full(q, s)["votes"])
-    us_full, votes_full = time_us(f_full, qv, sv, iters=2)
-    rows.append((f"engine/full_N{N}", us_full, qps(us_full) + ";backend=ref"))
+    st_full, votes_full = time_percentiles(f_full, qv, sv, iters=2)
+    us_full = st_full["us"]
+    rows.append((f"engine/full_N{N}", us_full,
+                 qps(us_full) + ";backend=ref", st_full))
 
     # two-phase: MXU shortlist + exact rescore, per shortlist backend
     votes_tp = {}
     for backend in ("ref", "mxu", "fused"):
         eng = RetrievalEngine(cfg, backend=backend)
         f_tp = jax.jit(lambda q, s, e=eng: e.two_phase(q, s, k=K)["votes"])
-        us_tp, votes_tp[backend] = time_us(f_tp, qv, sv, iters=3)
+        st_tp, votes_tp[backend] = time_percentiles(f_tp, qv, sv, iters=3)
+        us_tp = st_tp["us"]
         rows.append((f"engine/two_phase_k{K}_{backend}", us_tp,
-                     qps(us_tp) + f";speedup_vs_full={us_full / us_tp:.1f}x"))
+                     qps(us_tp) + f";speedup_vs_full={us_full / us_tp:.1f}x",
+                     st_tp))
     for backend in ("mxu", "fused"):  # backends must agree bit-exactly
         np.testing.assert_array_equal(np.asarray(votes_tp["ref"]),
                                       np.asarray(votes_tp[backend]))
@@ -70,9 +77,11 @@ def run():
     for backend in ("ref", "mxu", "fused"):
         eng = RetrievalEngine(cfg, backend=backend)
         f_st = jax.jit(lambda st, q, e=eng: e.search(st, q, req).votes)
-        us_st, votes_st = time_us(f_st, store, qv, iters=3)
+        st_st, votes_st = time_percentiles(f_st, store, qv, iters=3)
+        us_st = st_st["us"]
         rows.append((f"engine/search_store_k{K}_{backend}", us_st,
-                     qps(us_st) + f";speedup_vs_full={us_full / us_st:.1f}x"))
+                     qps(us_st) + f";speedup_vs_full={us_full / us_st:.1f}x",
+                     st_st))
         np.testing.assert_array_equal(np.asarray(votes_tp["ref"]),
                                       np.asarray(votes_st))
 
@@ -86,9 +95,10 @@ def run():
     with mesh:
         f_sh = jax.jit(lambda q, s: eng.sharded_two_phase(
             q, s, mesh, axes=("data",), k=K)["votes"])
-        us_sh, votes_sh = time_us(f_sh, qv, svs, iters=3)
+        st_sh, votes_sh = time_percentiles(f_sh, qv, svs, iters=3)
+    us_sh = st_sh["us"]
     rows.append((f"engine/sharded_two_phase_k{K}_dev{n_dev}", us_sh,
-                 qps(us_sh) + f";shards={n_dev}"))
+                 qps(us_sh) + f";shards={n_dev}", st_sh))
     np.testing.assert_array_equal(np.asarray(votes_tp["ref"]),
                                   np.asarray(votes_sh))
 
@@ -97,9 +107,10 @@ def run():
     sstore = store.shard(mesh, ("data",))
     with mesh:
         f_ss = jax.jit(lambda st, q: eng.search(st, q, req).votes)
-        us_ss, votes_ss = time_us(f_ss, sstore, qv, iters=3)
+        st_ss, votes_ss = time_percentiles(f_ss, sstore, qv, iters=3)
+    us_ss = st_ss["us"]
     rows.append((f"engine/search_sharded_k{K}_dev{n_dev}", us_ss,
-                 qps(us_ss) + f";shards={n_dev}"))
+                 qps(us_ss) + f";shards={n_dev}", st_ss))
     np.testing.assert_array_equal(np.asarray(votes_tp["ref"]),
                                   np.asarray(votes_ss))
 
@@ -111,15 +122,19 @@ def run():
     wlabs = jnp.arange(W, dtype=jnp.int32)
     base = MemoryStore.create(mcfg).calibrate(wvecs)
     f_w = jax.jit(lambda st, v, l: st.write(v, l).values)
-    us_w, _ = time_us(f_w, base, wvecs, wlabs, iters=3)
+    st_w, _ = time_percentiles(f_w, base, wvecs, wlabs, iters=3)
+    us_w = st_w["us"]
     rows.append((f"engine/write_scatter_b{W}", us_w,
-                 f"rows_per_s={W / us_w * 1e6:.0f}"))
+                 f"rows_per_s={W / us_w * 1e6:.0f}", st_w))
     sbase = base.shard(mesh, ("data",))
     with mesh:
         f_ws = jax.jit(lambda st, v, l: st.write(v, l).values)
-        us_ws, vals_ws = time_us(f_ws, sbase, wvecs, wlabs, iters=3)
+        st_ws, vals_ws = time_percentiles(f_ws, sbase, wvecs, wlabs,
+                                          iters=3)
+    us_ws = st_ws["us"]
     rows.append((f"engine/write_stream_b{W}_dev{n_dev}", us_ws,
-                 f"rows_per_s={W / us_ws * 1e6:.0f};shards={n_dev}"))
+                 f"rows_per_s={W / us_ws * 1e6:.0f};shards={n_dev}",
+                 st_ws))
     np.testing.assert_array_equal(np.asarray(f_w(base, wvecs, wlabs)),
                                   np.asarray(vals_ws))
 
@@ -132,12 +147,17 @@ def run():
     ireq = SearchRequest(mode="ideal", k=K)
     f_id = {b: jax.jit(lambda st, q, e=RetrievalEngine(cfg, backend=b):
                        e.search(st, q, ireq)) for b in ("ref", "fused")}
-    us_dense, res_dense = time_us(f_id["ref"], istore, qv, iters=3)
-    rows.append((f"engine/ideal_dense_N{N_IDEAL}", us_dense, qps(us_dense)))
-    us_fused, res_fused = time_us(f_id["fused"], istore, qv, iters=3)
+    st_dense, res_dense = time_percentiles(f_id["ref"], istore, qv, iters=3)
+    us_dense = st_dense["us"]
+    rows.append((f"engine/ideal_dense_N{N_IDEAL}", us_dense, qps(us_dense),
+                 st_dense))
+    st_fused, res_fused = time_percentiles(f_id["fused"], istore, qv,
+                                           iters=3)
+    us_fused = st_fused["us"]
     rows.append((f"engine/ideal_fused_N{N_IDEAL}", us_fused,
                  qps(us_fused)
-                 + f";speedup_vs_dense={us_dense / us_fused:.1f}x"))
+                 + f";speedup_vs_dense={us_dense / us_fused:.1f}x",
+                 st_fused))
     for key in ("votes", "dist", "indices", "labels"):
         np.testing.assert_array_equal(np.asarray(getattr(res_dense, key)),
                                       np.asarray(getattr(res_fused, key)))
@@ -165,9 +185,10 @@ def run():
         tq = jax.random.randint(jax.random.PRNGKey(300 + T), (B, t_dim),
                                 0, 4)
         tids = jax.random.randint(jax.random.PRNGKey(400 + T), (B,), 0, T)
-        us_co, res_co = time_us(f_co, tts, tq, tids, iters=3)
+        st_co, res_co = time_percentiles(f_co, tts, tq, tids, iters=3)
+        us_co = st_co["us"]
         rows.append((f"engine/tenants_coalesced_T{T}", us_co,
-                     qps(us_co) + f";tenants={T}"))
+                     qps(us_co) + f";tenants={T}", st_co))
 
         # sequential: one solo search per tenant group (what serving
         # without the stack would do) -- parity-asserted against the
@@ -182,10 +203,12 @@ def run():
             jax.block_until_ready(out)
             return out
 
-        us_seq, res_seq = time_us(seq, iters=3)
+        st_seq, res_seq = time_percentiles(seq, iters=3)
+        us_seq = st_seq["us"]
         rows.append((f"engine/tenants_sequential_T{T}", us_seq,
                      qps(us_seq)
-                     + f";coalesced_speedup={us_seq / us_co:.1f}x"))
+                     + f";coalesced_speedup={us_seq / us_co:.1f}x",
+                     st_seq))
         for (t, sel), solo in zip(groups, res_seq):
             np.testing.assert_array_equal(
                 np.asarray(res_co.labels[jnp.asarray(sel)]),

@@ -18,6 +18,26 @@ def time_us(fn, *args, warmup=1, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6, out
 
 
+def time_percentiles(fn, *args, warmup=1, iters=5):
+    """Like `time_us` but times every call individually and returns
+    ({'us', 'p50', 'p95', 'p99'}, out) -- the one shared percentile
+    schema benchmark rows attach as their optional 4th element (see
+    benchmarks/run.py). 'us' is the mean, directly comparable to
+    `time_us` rows."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    arr = np.asarray(ts)
+    return {"us": float(arr.mean()),
+            "p50": float(np.percentile(arr, 50)),
+            "p95": float(np.percentile(arr, 95)),
+            "p99": float(np.percentile(arr, 99))}, out
+
+
 def synthetic_episode(key, n_way, k_shot, n_query, dim, sep=2.2, noise=0.9):
     """Clustered embeddings standing in for controller outputs."""
     kc, ks, kq = jax.random.split(jax.random.PRNGKey(key), 3)

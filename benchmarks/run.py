@@ -17,6 +17,9 @@ Suites:
            sweep) on a forced 8-device host mesh (subprocess, like
            tests/test_distributed.py); writes
            results/bench_engine_sharded.json (CI artifact)
+  router   hierarchical-routing sweep: recall@1 + latency percentiles per
+           nprobe on a class-coherent partitioned store (bench_router);
+           refreshes the committed repo-root BENCH_router.json
   hat      hardware-aware training step timings (episodic meta-train step
            through the engine's differentiable MCAM forward vs the plain
            pretrain step) + the per-encoding engine.search cost sweep
@@ -50,6 +53,7 @@ SUITES = {
     "kernel": "benchmarks.bench_kernels",
     "engine": "benchmarks.bench_engine",
     "engine_sharded": "benchmarks.bench_engine_sharded",
+    "router": "benchmarks.bench_router",
     "hat": "benchmarks.bench_hat",
     "roofline": "benchmarks.roofline",
 }
@@ -57,6 +61,7 @@ SUITES = {
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SUMMARY_PATH = os.path.join(ROOT, "results", "bench_summary.json")
 SHORTLIST_PATH = os.path.join(ROOT, "BENCH_shortlist.json")
+ROUTER_PATH = os.path.join(ROOT, "BENCH_router.json")
 
 # The large-N ideal rows as measured BEFORE the shortlist kernel rework
 # (PR 5, same CPU pallas-interpret mode): the fused kernel's O(k*(k+tile_n))
@@ -86,6 +91,23 @@ def _emit_shortlist_bench(engine_rows: list[dict]) -> bool:
     return True
 
 
+def _emit_router_bench(router_rows: list[dict]) -> bool:
+    """Refresh the committed repo-root BENCH_router.json from the router
+    suite: the recall-vs-nprobe-vs-latency curve (percentiles included),
+    so the routing claim is checkable from the repo alone."""
+    if not router_rows:
+        return False
+    with open(ROUTER_PATH, "w") as f:
+        json.dump({"generated_by": "benchmarks.run --only router",
+                   "measurement": "cpu xla / pallas-interpret past the "
+                                  "fused crossover -- recall curve and "
+                                  "routed-vs-exhaustive ordering are the "
+                                  "signal; re-measure on TPU for absolute "
+                                  "latencies",
+                   "rows": router_rows}, f, indent=1)
+    return True
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
@@ -101,11 +123,17 @@ def main() -> None:
         try:
             mod = importlib.import_module(modname)
             suite_rows = []
-            for name, us, derived in mod.run():
+            # rows are (name, us, derived) or (name, us, derived, stats)
+            # where stats is common.time_percentiles' shared schema
+            for row in mod.run():
+                name, us, derived = row[:3]
                 print(f"{name},{us:.1f},{derived}")
                 sys.stdout.flush()
-                suite_rows.append({"name": name, "us_per_call": us,
-                                   "derived": derived})
+                entry = {"name": name, "us_per_call": us,
+                         "derived": derived}
+                if len(row) > 3 and row[3]:
+                    entry["percentiles"] = row[3]
+                suite_rows.append(entry)
             summary[key] = suite_rows
         except Exception as e:  # keep the harness going; report at the end
             failed.append((key, repr(e)))
@@ -151,6 +179,9 @@ def main() -> None:
     if "engine" in summary and _emit_shortlist_bench(summary["engine"]):
         print(f"# wrote {os.path.relpath(SHORTLIST_PATH, ROOT)} "
               f"(dense-vs-fused shortlist trajectory)")
+    if "router" in summary and _emit_router_bench(summary["router"]):
+        print(f"# wrote {os.path.relpath(ROUTER_PATH, ROOT)} "
+              f"(recall-vs-nprobe routing curve)")
     if failed:
         print(f"# {len(failed)} suite(s) failed: {failed}", file=sys.stderr)
         sys.exit(1)

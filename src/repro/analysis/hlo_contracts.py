@@ -43,6 +43,11 @@ LAYOUT_SCOPE_TAG = "layout_support"
 # iff the fused kernel was traced.
 FUSED_SCOPE_TAG = "shortlist_fused"
 
+# jax.named_scope tag wrapping the phase-0 router's sketch matmul
+# (repro/engine/router.route_scores): present in compiled HLO iff a
+# search routes through the per-shard summary sketch (nprobe < n_shards).
+ROUTER_SCOPE_TAG = "router_sketch"
+
 # Double-precision leak marker: no search/write/training-forward program
 # may promote to f64 (jax runs x64-disabled; this guards explicit leaks).
 F64_TYPE_TAG = "f64["
@@ -109,6 +114,19 @@ def check_fused_tag(hlo: str, expected: bool) -> list[str]:
     return []
 
 
+def check_router_tag(hlo: str, expected: bool) -> list[str]:
+    """The `router_sketch` scope tag appears iff routing is engaged
+    (`SearchRequest.nprobe < store.n_shards`) -- exhaustive searches must
+    not pay the sketch matmul, routed ones must go through it."""
+    lines = matched_lines(hlo, (ROUTER_SCOPE_TAG,))
+    if expected and not lines:
+        return [f"nprobe < n_shards engages the router but the "
+                f"{ROUTER_SCOPE_TAG!r} tag is absent from the compiled HLO"]
+    if not expected and lines:
+        return lines
+    return []
+
+
 def check_no_f64(hlo: str) -> list[str]:
     """No f64 tensor anywhere in the compiled program."""
     return matched_lines(hlo, (F64_TYPE_TAG,))
@@ -162,6 +180,11 @@ def assert_layout_ops_present(hlo: str) -> None:
 def assert_fused_tag(hlo: str, expected: bool) -> None:
     _raise(check_fused_tag(hlo, expected),
            f"fused-shortlist tag mismatch (expected engaged={expected})")
+
+
+def assert_router_tag(hlo: str, expected: bool) -> None:
+    _raise(check_router_tag(hlo, expected),
+           f"router-sketch tag mismatch (expected engaged={expected})")
 
 
 def assert_no_f64(hlo: str) -> None:

@@ -7,6 +7,10 @@ config matrix:
   engine.search      mode (full/two_phase/ideal) x backend (ref/mxu/fused)
                      x sharded/unsharded x packed/unpacked operand
                      x fused_min_rows (forcing both sides of the dispatch)
+                     x routed (nprobe < n_shards on a host-partitioned
+                     store engages the phase-0 sketch router, PR 10: the
+                     `router_sketch` scope tag must appear iff routing is
+                     engaged, and the sketch matmul adds no collectives)
   engine.search_tenants
                      the vmapped multi-tenant dispatch (PR 9) over a
                      ragged 5-tenant stack: same fused/layout/f64
@@ -107,6 +111,8 @@ INVARIANTS: dict[str, Callable[[dict], list[str]]] = {
     "layout_ops_present": lambda a: hc.check_layout_ops_present(a["hlo"]),
     "fused_tag_iff_dispatch_rule":
         lambda a: hc.check_fused_tag(a["hlo"], a["expect_fused"]),
+    "router_tag_iff_engaged":
+        lambda a: hc.check_router_tag(a["hlo"], a["expect_router"]),
     "no_f64_promotion": lambda a: hc.check_no_f64(a["hlo"]),
     "hbm_buffer_bound": _inv_hbm_buffer_bound,
     "single_jit_cache_entry_per_request_family": _inv_jit_cache,
@@ -248,6 +254,47 @@ def _search_cell(mode: str, backend: str, fmr: int, packed: bool,
                         "sharded": sharded, "packed": packed,
                         "fused_min_rows": fmr},
                 invariants=tuple(invariants), build=build, skip=skip)
+
+
+def _routed_cell(mode: str, backend: str, fmr: int, packed: bool,
+                 nprobe: int, n_shards: int = 8) -> Cell:
+    """engine.search with nprobe on a LOGICALLY partitioned store
+    (`shard(n_shards=...)`, mesh-less -- so no device minimum and no
+    collectives anywhere, sketch matmul included). nprobe < n_shards must
+    compile the router (scope tag present); nprobe == n_shards is the
+    control: the SAME exhaustive program as nprobe=None, tag absent."""
+    from repro.engine import RetrievalEngine, SearchRequest
+
+    engaged = nprobe < n_shards
+
+    def build() -> dict:
+        fx = _fix()
+        store = fx["store"].shard(n_shards=n_shards)
+        if not packed:
+            store = _unpacked(store)
+        eng = RetrievalEngine(fx["cfg"], backend=backend)
+        req = SearchRequest(mode=mode, k=CELL_K, fused_min_rows=fmr,
+                            nprobe=nprobe)
+        compiled = _compile(
+            lambda st, q: eng.search(st, q, req).votes, store, fx["qv"])
+        # the routed shortlist ranks the CONCATENATED visited blocks:
+        # rows_loc = nprobe * rows_per_shard; the control is exhaustive
+        # over the whole (unsharded-dispatch) store
+        rows_loc = (nprobe * (store.capacity // n_shards) if engaged
+                    else store.capacity)
+        return {"hlo": compiled.as_text(), "compiled": compiled,
+                "expect_router": engaged,
+                "expect_fused": _expect_fused(backend, rows_loc, mode,
+                                              fmr)}
+
+    return Cell(entry="engine.search",
+                config={"mode": mode, "backend": backend, "packed": packed,
+                        "fused_min_rows": fmr, "nprobe": nprobe,
+                        "n_shards": n_shards},
+                invariants=("router_tag_iff_engaged",
+                            "fused_tag_iff_dispatch_rule", "no_layout_ops",
+                            "no_f64_promotion", "no_collectives"),
+                build=build)
 
 
 def _hbm_stats(compiled, B: int, k: int, N: int, d: int) -> dict:
@@ -459,6 +506,17 @@ def build_cells() -> list[Cell]:
                                       n_shards))
         cells.append(_search_cell(mode, "fused", FMR_FORCE_DENSE, False,
                                   True, n_shards))
+
+    # engine.search, routed (PR 10): nprobe over a host-partitioned store
+    # -- both phase-1 dispositions (dense mxu / fused packed + unpacked)
+    # plus the nprobe == n_shards control whose program must contain NO
+    # router tag (it IS the exhaustive search)
+    cells.append(_routed_cell("two_phase", "mxu", FMR_FORCE_DENSE, True, 2))
+    cells.append(_routed_cell("two_phase", "fused", FMR_FORCE_FUSED, True,
+                              2))
+    cells.append(_routed_cell("ideal", "fused", FMR_FORCE_FUSED, True, 2))
+    cells.append(_routed_cell("ideal", "fused", FMR_FORCE_FUSED, False, 2))
+    cells.append(_routed_cell("two_phase", "mxu", FMR_FORCE_DENSE, True, 8))
 
     # engine.search_tenants: the vmapped multi-tenant dispatch (PR 9) --
     # one cell per representative route (full dense x ref/mxu, two-phase

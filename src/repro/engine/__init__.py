@@ -22,12 +22,23 @@ The serving contract (PR 2) is store-centric:
                        `RetrievalEngine.search_tenants` (PR 9) -- one jit
                        cache entry for ANY tenant count, per-tenant results
                        bit-identical to solo `search` (tests/test_tenant.py).
+  router / ShardPager  the memory hierarchy (PR 10): every partitioned store
+                       maintains a per-shard class-centroid sketch at write
+                       time; `SearchRequest.nprobe` scores it and searches
+                       only the top-p shards (bit-identical to brute force
+                       over the visited shards), and `ShardPager` serves a
+                       `shard(n_shards=..., residency="host")` store whose
+                       cold shards live in host memory, paging visited ones
+                       through a fixed set of device slots.
 """
 
 from repro.engine.api import SearchRequest, SearchResult
 from repro.engine.backends import (BACKENDS, kernels_available,
                                    resolve_backend)
 from repro.engine.engine import IDEAL_FUSED_MIN_ROWS, RetrievalEngine
+from repro.engine.pager import ShardPager
+from repro.engine.router import (ROUTER_BUCKETS, build_sketch, route_scores,
+                                 sketch_centroids, top_shards)
 from repro.engine.sharded import (sharded_ideal_search,
                                   sharded_two_phase_search)
 from repro.engine.store import MemoryStore
@@ -37,13 +48,19 @@ __all__ = [
     "BACKENDS",
     "IDEAL_FUSED_MIN_ROWS",
     "MemoryStore",
+    "ROUTER_BUCKETS",
     "RetrievalEngine",
     "SearchRequest",
     "SearchResult",
+    "ShardPager",
     "TenantStore",
+    "build_sketch",
     "kernels_available",
     "resolve_backend",
+    "route_scores",
     "sharded_ideal_search",
     "sharded_two_phase_search",
+    "sketch_centroids",
     "tenant_query_rank",
+    "top_shards",
 ]

@@ -63,6 +63,16 @@ class SearchRequest:
              the train/serve parity contract: noiseless votes are
              bit-identical to hardware-aware training's in-episode scores
              (`RetrievalEngine.episode_votes`) on the same support set.
+    nprobe:  shards visited per query ('two_phase' / 'ideal' only). On a
+             partitioned store (`MemoryStore.shard`), nprobe=p < n_shards
+             engages the phase-0 router (engine/router.py): the per-shard
+             summary sketch is scored with one small matmul and phase 1/2
+             run only on the top-p shards -- bit-identical to brute force
+             restricted to those shards (same SHORTLIST_MASK_PENALTY,
+             same (distance, index) lex merge). None (the default) and
+             nprobe >= n_shards reproduce the exhaustive all-shards
+             search byte-for-byte. Recall-vs-nprobe is a measured serving
+             knob (benchmarks/bench_router.py, BENCH_router.json).
 
     >>> SearchRequest(mode="ideal", k=8).mode
     'ideal'
@@ -81,11 +91,21 @@ class SearchRequest:
     axes: tuple[str, ...] | None = None
     fused_min_rows: int | None = None
     noisy: bool | None = None
+    nprobe: int | None = None
 
     def __post_init__(self) -> None:
         if self.mode not in MODES:
             raise ValueError(
                 f"unknown search mode {self.mode!r}; expected one of {MODES}")
+        if self.nprobe is not None:
+            if self.mode == "full":
+                raise ValueError(
+                    "SearchRequest: nprobe routes the shortlist modes "
+                    "('two_phase' / 'ideal'); mode='full' scores every "
+                    "row by definition")
+            if self.nprobe < 1:
+                raise ValueError(f"SearchRequest: nprobe must be >= 1, "
+                                 f"got {self.nprobe}")
 
 
 @partial(jax.tree_util.register_dataclass,

@@ -70,10 +70,13 @@ def _noise_stream(key: jax.Array | int | None) -> jax.Array | None:
 # instead of materialising the dense (B, N) distance matrix -- HBM traffic
 # drops from O(B*N) to O(B*k + N*4d), bit-identically (the fused kernel
 # reproduces lax.top_k's (distance, row) order exactly, ties included).
-# This default is a CPU-interpret guess; override it without code change
-# via RetrievalEngine(fused_min_rows=...) or SearchRequest.fused_min_rows
-# once the dense-vs-fused crossover is measured on real TPU HBM.
-IDEAL_FUSED_MIN_ROWS = 4096
+# 1024 is the MEASURED dense-vs-fused crossover from the PR-6 shortlist
+# rework (BENCH_shortlist.json / benchmarks/autotune_shortlist.py, CPU
+# interpret mode). Still a knob, not a constant: override without code
+# change via RetrievalEngine(fused_min_rows=...) or
+# SearchRequest.fused_min_rows, and re-run the autotune sweep on real TPU
+# to rewrite it there (ROADMAP item 3 note).
+IDEAL_FUSED_MIN_ROWS = 1024
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,9 +175,23 @@ class RetrievalEngine:
         """
         req = request if request is not None else SearchRequest()
         eng = self.with_backend(req.backend).with_noisy(req.noisy)
+        if store.residency == "host":
+            raise ValueError(
+                "RetrievalEngine.search: this store's shards live in host "
+                "memory (shard(..., residency='host')); search it through "
+                "repro.engine.pager.ShardPager, which pages the visited "
+                "shards into device memory -- or re-shard with "
+                "residency='device'.")
         q = store.quantize_queries(queries)
         valid = store.valid
         iters = eng._iterations(q.shape[-1])
+
+        # phase-0 routing: engaged iff the request asks for FEWER shards
+        # than the store has (nprobe=None and nprobe >= n_shards fall
+        # through to the exhaustive paths below, byte-for-byte)
+        if (req.nprobe is not None and req.mode != "full"
+                and req.nprobe < store.n_shards):
+            return eng._search_routed(store, q, req)
 
         if store.mesh is None or req.mode == "full":
             return eng._search_unsharded(store, q, req)
@@ -269,6 +286,106 @@ class RetrievalEngine:
         labels = store.labels[idx]
         votes = jnp.where(labels >= 0, -dist, -jnp.inf)
         return SearchResult(votes, dist, idx, labels, iters)
+
+    # -- routed (phase-0) search -------------------------------------------
+
+    def _search_routed(self, store: MemoryStore, q: jax.Array,
+                       req: SearchRequest) -> SearchResult:
+        """nprobe-routed search over a partitioned store: score the
+        write-time router sketch (engine/router.py, one small matmul under
+        the "router_sketch" scope), then run phase 1/2 on the top-p shard
+        blocks only -- bit-identical to brute force restricted to the
+        visited shards (tests/test_router.py). `self` already carries the
+        request's backend/noisy overrides; `q` is already quantized."""
+        from repro.engine import router as router_lib
+        s = store.n_shards
+        rows = store.capacity // s
+        scores = router_lib.route_scores(q, store.sketch_sums,
+                                         store.sketch_counts, self.cfg.enc)
+        sids = router_lib.top_shards(scores, int(req.nprobe or 0))
+        # per-shard block tables (S, rows, ...); on a mesh-sharded store
+        # these reshapes stay sharded and XLA inserts the per-query block
+        # gathers (the single-device / logical-partition path is the one
+        # the routed contract cells pin collective-free)
+        packed_t = (None if store.proj_packed is None
+                    else store.proj_packed.reshape(s, rows, -1))
+        return self._routed_block_search(
+            q, sids, jnp.arange(s, dtype=jnp.int32),
+            store.proj.reshape(s, rows, -1), packed_t,
+            store.s_grid.reshape((s, rows) + store.s_grid.shape[1:]),
+            store.labels.reshape(s, rows), req, store.pack_bits)
+
+    def _routed_block_search(self, q: jax.Array, slot_ids: jax.Array,
+                             shard_of: jax.Array, proj_t: jax.Array,
+                             packed_t: jax.Array | None,
+                             sgrid_t: jax.Array, labels_t: jax.Array,
+                             req: SearchRequest, pack_bits: int,
+                             noise_qidx: jax.Array | None = None
+                             ) -> SearchResult:
+        """Shared routed-search core over per-shard block tables.
+
+        `search` calls it with the store's own (S, rows, ...) tables and
+        `shard_of = arange(S)`; `engine/pager.ShardPager` calls it with
+        its device-RESIDENT slot tables (M, rows, ...) and the slot ->
+        global-shard map. Per query, `slot_ids` (B, p) names the visited
+        table rows ORDERED BY ASCENDING GLOBAL SHARD ID -- concatenating
+        the blocks in that order makes the candidate axis globally
+        index-ordered, so the shared `_local_shortlist` (fused kernel or
+        dense matmul, same mask penalty) reproduces the exhaustive
+        search's (distance, global index) lex order exactly on the
+        visited subset. Phase 2 rescores with GLOBAL indices feeding the
+        noise counters, so routed votes equal the full search's votes for
+        every shortlisted candidate.
+        """
+        from repro.engine.sharded import _local_shortlist, _use_fused
+        from repro.kernels import ops as kernel_ops
+        cfg = self.cfg
+        assert cfg.mode == "avss", "routed search shortlists the AVSS LUT"
+        p = slot_ids.shape[1]
+        rows = proj_t.shape[1]
+        rows_vis = p * rows
+        k = min(req.k, rows_vis)
+        fused = _use_fused(self.resolved_backend, rows_vis,
+                           self._fused_threshold(req))
+        two_phase = req.mode == "two_phase"
+        q1h = kernel_ops.query_onehot(q, jnp.float32)
+        q_grid = avss_lib.layout_query(q, cfg.enc, "avss",
+                                       cfg.mcam.string_len)
+        weights = cfg.enc.weights_array()
+        thresholds = jnp.asarray(cfg.mcam.thresholds())
+        if noise_qidx is None:
+            noise_qidx = jnp.arange(q.shape[0], dtype=jnp.uint32)
+
+        def one(q1h_b: jax.Array, qgrid_b: jax.Array, sl_b: jax.Array,
+                qi_b: jax.Array
+                ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+            lab_vis = labels_t[sl_b].reshape(rows_vis)
+            proj_vis = proj_t[sl_b].reshape(rows_vis, -1)
+            pk_vis = (packed_t[sl_b].reshape(rows_vis, -1)
+                      if fused and packed_t is not None else None)
+            dist, li = _local_shortlist(q1h_b[None], proj_vis,
+                                        lab_vis >= 0, k, fused=fused,
+                                        packed=pk_vis, pack_bits=pack_bits)
+            # local candidate position -> global store row: visited blocks
+            # are ascending-shard-ordered, block i covers global rows
+            # [shard_of[sl_b[i]] * rows, ...)
+            gidx = shard_of[sl_b][li // rows] * rows + li % rows
+            lab = lab_vis[li]
+            if two_phase:
+                sg_vis = sgrid_t[sl_b].reshape((rows_vis,)
+                                               + sgrid_t.shape[2:])
+                votes = kernel_ops.rescore_shortlist(
+                    qgrid_b[None], sg_vis, li, weights, cfg, thresholds,
+                    noise_idx=gidx, noise_qidx=qi_b[None])
+            else:
+                votes = -dist
+            votes = jnp.where(lab >= 0, votes, -jnp.inf)
+            return votes[0], dist[0], gidx[0], lab[0]
+
+        votes, dist, indices, labels = jax.vmap(one)(
+            q1h, q_grid, slot_ids, noise_qidx.astype(jnp.uint32))
+        return SearchResult(votes, dist, indices, labels,
+                            self._iterations(q.shape[-1]))
 
     # -- multi-tenant dispatch ---------------------------------------------
 

@@ -16,6 +16,11 @@ strings and searched many times: MTMC encoding happens at write time (Sec.
                            (never written, or a ragged-shard pad row)
   size     ()      int32   total writes so far (monotonic; ring position)
   lo, hi   ()      f32     calibrated quantization range
+  sketch_sums   (S, R, d) int32  phase-0 router sketch: per row-shard,
+  sketch_counts (S, R)    int32  per-class-bucket sums/counts of valid
+                           rows (engine/router.py). Maintained by both
+                           write paths (integer-exact, scatter-free) and
+                           rebuilt by `shard`; S=1 on unsharded stores.
 
 so searches -- including the decode loop `serve --retrieval` jits -- run
 against write-time constants instead of re-running `layout_support` /
@@ -25,6 +30,11 @@ label -1 rows that the integer-exact mask penalty ranks last) and records
 (mesh, axes) as static metadata, making `RetrievalEngine.search` dispatch
 shard-aware with no caller plumbing. Re-sharding always starts from the
 LOGICAL `cfg.capacity` rows, so `shard` is idempotent (pads never pad).
+`shard` also partitions WITHOUT a mesh (`shard(n_shards=S)`): the store
+keeps its global arrays but records S contiguous row blocks in the
+router sketch, which is what `SearchRequest.nprobe` routes over; with
+`residency="host"` the blocks additionally live in host memory and are
+paged onto the device by `engine/pager.ShardPager` (beyond-HBM serving).
 
 Writes on a MULTI-shard store stay shard-LOCAL (the paper's economics:
 NAND programming is the cheap in-place operation). `write` dispatches to a
@@ -60,7 +70,22 @@ from repro.core import avss as avss_lib
 from repro.core import quantization as quant_lib
 from repro.core.avss import SearchConfig
 from repro.core.memory import MemoryConfig
+from repro.engine import router as router_lib
 from repro.kernels import ops as kernel_ops
+
+#: array leaves of the store pytree (register_dataclass data_fields; also
+#: the per-leaf set `shard(residency="host")` moves to host memory).
+_DATA_FIELDS = ["values", "proj", "proj_packed", "s_grid", "labels",
+                "size", "lo", "hi", "sketch_sums", "sketch_counts"]
+
+
+def _host_device() -> jax.Device | None:
+    """The host (CPU) device for `residency="host"` placement, or None
+    when jax exposes no CPU backend."""
+    try:
+        return jax.local_devices(backend="cpu")[0]
+    except RuntimeError:
+        return None
 
 
 def _quantize(x: jax.Array, levels: int, lo: jax.Array,
@@ -71,9 +96,8 @@ def _quantize(x: jax.Array, levels: int, lo: jax.Array,
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["values", "proj", "proj_packed", "s_grid", "labels",
-                      "size", "lo", "hi"],
-         meta_fields=["cfg", "mesh", "axes", "calibrated"])
+         data_fields=_DATA_FIELDS,
+         meta_fields=["cfg", "mesh", "axes", "calibrated", "residency"])
 @dataclasses.dataclass(frozen=True)
 class MemoryStore:
     """Immutable programmed MCAM store (see module docstring).
@@ -115,10 +139,13 @@ class MemoryStore:
     size: jax.Array
     lo: jax.Array
     hi: jax.Array
+    sketch_sums: jax.Array
+    sketch_counts: jax.Array
     cfg: MemoryConfig
     mesh: Mesh | None = None
     axes: tuple[str, ...] = ()
     calibrated: bool = False
+    residency: str = "device"
 
     # -- construction --------------------------------------------------------
 
@@ -133,15 +160,19 @@ class MemoryStore:
         enc = cfg.search.enc
         zeros = jnp.zeros((cfg.capacity, cfg.dim), jnp.int32)
         proj = kernel_ops.support_projection(zeros, enc)
+        labels = jnp.full((cfg.capacity,), -1, jnp.int32)
+        sk_sums, sk_counts = router_lib.build_sketch(zeros, labels, 1)
         return cls(
             values=zeros,
             proj=proj,
             proj_packed=kernel_ops.pack_projection(proj, enc),
             s_grid=_layout(zeros, cfg),
-            labels=jnp.full((cfg.capacity,), -1, jnp.int32),
+            labels=labels,
             size=jnp.zeros((), jnp.int32),
             lo=jnp.zeros((), jnp.float32),
             hi=jnp.ones((), jnp.float32),
+            sketch_sums=sk_sums,
+            sketch_counts=sk_counts,
             cfg=cfg,
         )
 
@@ -156,16 +187,20 @@ class MemoryStore:
         n, d = values.shape
         cfg = MemoryConfig(capacity=n, dim=d, search=search_cfg)
         v = values.astype(jnp.int32)
+        lab = labels.astype(jnp.int32)
         proj = kernel_ops.support_projection(v, cfg.search.enc)
+        sk_sums, sk_counts = router_lib.build_sketch(v, lab, 1)
         return cls(
             values=v,
             proj=proj,
             proj_packed=kernel_ops.pack_projection(proj, cfg.search.enc),
             s_grid=_layout(v, cfg),
-            labels=labels.astype(jnp.int32),
+            labels=lab,
             size=jnp.asarray(n, jnp.int32),
             lo=jnp.zeros((), jnp.float32),
             hi=jnp.ones((), jnp.float32),
+            sketch_sums=sk_sums,
+            sketch_counts=sk_counts,
             cfg=cfg,
         )
 
@@ -204,11 +239,16 @@ class MemoryStore:
                                                 cfg.search.enc)
         # legacy dicts carry no calibration flag; adopt their lo/hi as-is
         # (the pre-redesign API managed calibration itself) so the shims in
-        # core/memory.py stay bit-identical.
+        # core/memory.py stay bit-identical. The router sketch is a
+        # deterministic integer function of (values, labels), so rebuilding
+        # it here (state dicts never carry it) is bit-exact.
+        sk_sums, sk_counts = router_lib.build_sketch(
+            state["values"], state["labels"], 1)
         return cls(values=state["values"], proj=state["proj"],
                    proj_packed=packed,
                    s_grid=s_grid, labels=state["labels"],
                    size=state["size"], lo=state["lo"], hi=state["hi"],
+                   sketch_sums=sk_sums, sketch_counts=sk_counts,
                    cfg=cfg, calibrated=True)
 
     def to_state(self) -> dict[str, jax.Array]:
@@ -256,10 +296,12 @@ class MemoryStore:
 
     @property
     def n_shards(self) -> int:
-        """Number of row shards (1 for an unsharded store)."""
-        if self.mesh is None:
-            return 1
-        return int(np.prod([self.mesh.shape[a] for a in self.axes]))
+        """Number of row shards: mesh-derived when the store is
+        device-sharded, else the router sketch's partition count (logical
+        `shard(n_shards=S)` blocks; 1 for an unpartitioned store)."""
+        if self.mesh is not None:
+            return int(np.prod([self.mesh.shape[a] for a in self.axes]))
+        return int(self.sketch_sums.shape[0])
 
     @property
     def pack_bits(self) -> int:
@@ -346,14 +388,36 @@ class MemoryStore:
                  n: int) -> "MemoryStore":
         enc = self.cfg.search.enc
         proj = kernel_ops.support_projection(v, enc)
+        lab = labels.astype(jnp.int32)
+        new_values = self.values.at[idx].set(v)
+        new_labels = self.labels.at[idx].set(lab)
+        s, r = self.sketch_sums.shape[0], self.sketch_sums.shape[1]
+        if s == 1:
+            # incremental sketch: the batch lands on DISTINCT ring slots
+            # (n <= capacity), so adding the (new - old) bucket stats over
+            # those slots is exact int32 arithmetic -- bit-identical to a
+            # full rebuild from (new_values, new_labels)
+            ds_new, dc_new = router_lib.bucket_sums(v, lab, r)
+            ds_old, dc_old = router_lib.bucket_sums(self.values[idx],
+                                                    self.labels[idx], r)
+            sk_sums = self.sketch_sums + (ds_new - ds_old)[None]
+            sk_counts = self.sketch_counts + (dc_new - dc_old)[None]
+        else:
+            # logically-partitioned store (mesh=None shard blocks): rows
+            # may cross block boundaries, so rebuild -- one one-hot int
+            # matmul, still scatter-free
+            sk_sums, sk_counts = router_lib.build_sketch(
+                new_values, new_labels, s, r)
         return dataclasses.replace(
             self,
-            values=self.values.at[idx].set(v),
+            values=new_values,
             proj=self.proj.at[idx].set(proj),
             proj_packed=self.proj_packed.at[idx].set(
                 kernel_ops.pack_projection(proj, enc)),
             s_grid=self.s_grid.at[idx].set(_layout(v, self.cfg)),
-            labels=self.labels.at[idx].set(labels.astype(jnp.int32)),
+            labels=new_labels,
+            sketch_sums=sk_sums,
+            sketch_counts=sk_counts,
             size=self.size + n,
         )
 
@@ -379,6 +443,7 @@ class MemoryStore:
         mesh, axes = self.mesh, self.axes
         ring = self.cfg.capacity
         enc = self.cfg.search.enc
+        n_buckets = self.sketch_sums.shape[1]
         start = (self.size % ring).astype(jnp.int32)
         proj_b = kernel_ops.support_projection(v, enc)
         batch = (v, proj_b, kernel_ops.pack_projection(proj_b, enc),
@@ -402,20 +467,31 @@ class MemoryStore:
                 w = written.reshape((-1,) + (1,) * (old.ndim - 1))
                 return jnp.where(w, new[jc].astype(old.dtype), old)
 
-            return (sel(v_, values_loc), sel(proj_, proj_loc),
+            new_vals = sel(v_, values_loc)
+            new_labs = sel(labels_, labels_loc)
+            # shard-local router sketch rebuild over the POST-write block:
+            # one-hot int matmul (router.bucket_sums), so the compiled HLO
+            # stays free of scatter AND collectives like the rest of the
+            # write-through; exact int32, bit-identical to the scatter
+            # path's sketch for the same rows
+            sk_sums, sk_counts = router_lib.bucket_sums(new_vals, new_labs,
+                                                        n_buckets)
+            return (new_vals, sel(proj_, proj_loc),
                     sel(packed_, packed_loc),
-                    sel(grid_, grid_loc), sel(labels_, labels_loc))
+                    sel(grid_, grid_loc), new_labs,
+                    sk_sums[None], sk_counts[None])
 
         out = shard_map(
             local, mesh=mesh,
             in_specs=(P(),) * 6 + (P(axes),) * 5,
-            out_specs=(P(axes),) * 5,
+            out_specs=(P(axes),) * 7,
             check_rep=False,
         )(start, *batch, self.values, self.proj, self.proj_packed,
           self.s_grid, self.labels)
         return dataclasses.replace(
             self, values=out[0], proj=out[1], proj_packed=out[2],
-            s_grid=out[3], labels=out[4], size=self.size + n)
+            s_grid=out[3], labels=out[4],
+            sketch_sums=out[5], sketch_counts=out[6], size=self.size + n)
 
     def quantize_queries(self, queries: jax.Array) -> jax.Array:
         """Float embeddings -> quantized query words ([0, 4) for AVSS,
@@ -439,10 +515,25 @@ class MemoryStore:
 
     # -- sharding ------------------------------------------------------------
 
-    def shard(self, mesh: Mesh,
-              axes: Sequence[str] = ("data",)) -> "MemoryStore":
-        """Row-shard the store over mesh `axes` and record the sharding as
-        a store property (RetrievalEngine.search dispatches on it).
+    def shard(self, mesh: Mesh | None = None,
+              axes: Sequence[str] = ("data",), *,
+              n_shards: int | None = None,
+              residency: str = "device") -> "MemoryStore":
+        """Row-shard the store and record the partition as a store property
+        (RetrievalEngine.search dispatches on it).
+
+        Two placements:
+
+        * `shard(mesh, axes)` -- device-shard over mesh `axes` (today's
+          path). The router sketch is rebuilt at the new shard count and
+          row-sharded alongside the data.
+        * `shard(n_shards=S)` -- LOGICAL partition, no mesh: the store
+          keeps its global arrays but the sketch records S contiguous row
+          blocks, which `SearchRequest.nprobe` routes over on a single
+          device. With `residency="host"` the arrays are additionally
+          placed in host (CPU) memory -- such a store is searched through
+          `engine/pager.ShardPager`, which pages the visited blocks into
+          device HBM (`engine.search` on it raises).
 
         Ragged splits are supported: when the row count does not divide the
         shard count, the store is padded with label -1 rows programmed to
@@ -455,10 +546,37 @@ class MemoryStore:
         `cfg.capacity` rows (any ragged pad rows from a previous shard are
         dropped first), so pads never accumulate and
         `shard(mesh_a).shard(mesh_b)` equals `shard(mesh_b)` exactly."""
-        axes = tuple(axes)
-        n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+        if residency not in ("device", "host"):
+            raise ValueError(f"unknown residency {residency!r}: expected "
+                             f"'device' or 'host'")
+        if mesh is not None:
+            if residency != "device":
+                raise ValueError(
+                    "MemoryStore.shard: mesh-sharded stores are device-"
+                    "resident; residency='host' applies to logical "
+                    "partitions (shard(n_shards=S, residency='host')) "
+                    "paged by engine/pager.ShardPager")
+            axes = tuple(axes)
+            n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+        elif n_shards is None or n_shards < 1:
+            raise ValueError("MemoryStore.shard: pass a mesh or "
+                             "n_shards >= 1")
         base = self._unpad()
         store = base._pad_rows((-base.capacity) % n_shards)
+        sk_sums, sk_counts = router_lib.build_sketch(
+            store.values, store.labels, n_shards,
+            self.sketch_sums.shape[1])
+        store = dataclasses.replace(store, sketch_sums=sk_sums,
+                                    sketch_counts=sk_counts)
+        if mesh is None:
+            if residency == "host":
+                dev = _host_device()
+                if dev is not None:
+                    moved = {f: jax.device_put(getattr(store, f), dev)
+                             for f in _DATA_FIELDS}
+                    store = dataclasses.replace(store, **moved)
+            return dataclasses.replace(store, mesh=None, axes=(),
+                                       residency=residency)
         row = NamedSharding(mesh, P(axes))
         rep = NamedSharding(mesh, P())
         return dataclasses.replace(
@@ -471,19 +589,31 @@ class MemoryStore:
             size=jax.device_put(store.size, rep),
             lo=jax.device_put(store.lo, rep),
             hi=jax.device_put(store.hi, rep),
-            mesh=mesh, axes=axes,
+            sketch_sums=jax.device_put(store.sketch_sums, row),
+            sketch_counts=jax.device_put(store.sketch_counts, row),
+            mesh=mesh, axes=axes, residency="device",
         )
 
     def _unpad(self) -> "MemoryStore":
-        """Drop ragged-shard pad rows: back to the logical cfg.capacity
-        rows (a no-op on a never-padded store)."""
+        """Back to the logical view: drop ragged-shard pad rows and reset
+        the router sketch to the unpartitioned S=1 block (so re-`shard`
+        always starts from the same logical store, whatever partition came
+        before). Does NOT move arrays between memories -- `shard` handles
+        placement."""
         n = self.cfg.capacity
-        if self.capacity == n:
-            return self
-        return dataclasses.replace(
-            self, values=self.values[:n], proj=self.proj[:n],
-            proj_packed=self.proj_packed[:n],
-            s_grid=self.s_grid[:n], labels=self.labels[:n])
+        base = self
+        if self.capacity != n:
+            base = dataclasses.replace(
+                self, values=self.values[:n], proj=self.proj[:n],
+                proj_packed=self.proj_packed[:n],
+                s_grid=self.s_grid[:n], labels=self.labels[:n])
+        if base.sketch_sums.shape[0] != 1 or base.residency != "device":
+            sk_sums, sk_counts = router_lib.build_sketch(
+                base.values, base.labels, 1, base.sketch_sums.shape[1])
+            base = dataclasses.replace(base, sketch_sums=sk_sums,
+                                       sketch_counts=sk_counts,
+                                       residency="device")
+        return base
 
     def _pad_rows(self, pad: int) -> "MemoryStore":
         if pad == 0:

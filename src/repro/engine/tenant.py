@@ -17,8 +17,8 @@ Stacking rules (enforced by `stack`):
   SHORTLIST_MASK_PENALTY, so pad rows rank after every valid row and
   bit-parity with the solo per-tenant search survives padding;
 * per-tenant state that searches need under jit (values / proj /
-  proj_packed / s_grid / labels / size / lo / hi) becomes batched data
-  leaves; per-tenant static metadata (each store's MemoryConfig and
+  proj_packed / s_grid / labels / size / lo / hi / the router
+  sketch_sums / sketch_counts) becomes batched data leaves; per-tenant static metadata (each store's MemoryConfig and
   calibration flag) rides along as aux data, so `tenant(i)` round-trips
   the EXACT original store.
 
@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.memory import MemoryConfig
+from repro.engine import router as router_lib
 from repro.engine.store import MemoryStore, _layout, _quantize
 from repro.kernels import ops as kernel_ops
 
@@ -64,7 +65,7 @@ def tenant_query_rank(tenant_ids: jax.Array) -> jax.Array:
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["values", "proj", "proj_packed", "s_grid", "labels",
-                      "size", "lo", "hi"],
+                      "size", "lo", "hi", "sketch_sums", "sketch_counts"],
          meta_fields=["cfgs", "calibrated"])
 @dataclasses.dataclass(frozen=True)
 class TenantStore:
@@ -72,8 +73,10 @@ class TenantStore:
 
     Data leaves carry a leading tenant axis over the solo store's layout:
     values (T, Np, d), proj (T, Np, 4d), proj_packed (T, Np, w),
-    s_grid (T, Np, seg, L, sl), labels (T, Np), size/lo/hi (T,) -- with
-    Np the stack-wide padded capacity. `cfgs` / `calibrated` keep each
+    s_grid (T, Np, seg, L, sl), labels (T, Np), size/lo/hi (T,),
+    sketch_sums (T, 1, R, d) / sketch_counts (T, 1, R) (each tenant's
+    unpartitioned router sketch, kept write-consistent by `write_at`) --
+    with Np the stack-wide padded capacity. `cfgs` / `calibrated` keep each
     tenant's ORIGINAL static metadata so `tenant(i)` is an exact inverse
     of `stack`.
 
@@ -101,6 +104,8 @@ class TenantStore:
     size: jax.Array
     lo: jax.Array
     hi: jax.Array
+    sketch_sums: jax.Array
+    sketch_counts: jax.Array
     cfgs: tuple[MemoryConfig, ...]
     calibrated: tuple[bool, ...]
 
@@ -136,7 +141,9 @@ class TenantStore:
         return cls(values=stk("values"), proj=stk("proj"),
                    proj_packed=stk("proj_packed"), s_grid=stk("s_grid"),
                    labels=stk("labels"), size=stk("size"), lo=stk("lo"),
-                   hi=stk("hi"), cfgs=tuple(s.cfg for s in stores),
+                   hi=stk("hi"), sketch_sums=stk("sketch_sums"),
+                   sketch_counts=stk("sketch_counts"),
+                   cfgs=tuple(s.cfg for s in stores),
                    calibrated=tuple(s.calibrated for s in stores))
 
     # -- derived properties --------------------------------------------------
@@ -174,6 +181,8 @@ class TenantStore:
             proj_packed=self.proj_packed[i, :cap],
             s_grid=self.s_grid[i, :cap], labels=self.labels[i, :cap],
             size=self.size[i], lo=self.lo[i], hi=self.hi[i],
+            sketch_sums=self.sketch_sums[i],
+            sketch_counts=self.sketch_counts[i],
             cfg=self.cfgs[i], calibrated=self.calibrated[i])
 
     def query_view(self, tenant_ids: jax.Array) -> MemoryStore:
@@ -189,6 +198,8 @@ class TenantStore:
                          else take(self.proj_packed)),
             s_grid=take(self.s_grid), labels=take(self.labels),
             size=take(self.size), lo=take(self.lo), hi=take(self.hi),
+            sketch_sums=take(self.sketch_sums),
+            sketch_counts=take(self.sketch_counts),
             cfg=self.cfg, calibrated=True)
 
     # -- programming ---------------------------------------------------------
@@ -264,6 +275,16 @@ class TenantStore:
         idx = (self.size[t] % ring
                + jnp.arange(n, dtype=jnp.int32)) % ring
         proj = kernel_ops.support_projection(v, enc)
+        lab = labels.astype(jnp.int32)
+        # the tenant's router sketch follows MemoryStore._program's
+        # incremental S=1 path exactly (same helper, same int32 delta over
+        # the distinct ring slots), so tenant(t) stays bit-identical to
+        # the solo store's write
+        n_buckets = self.sketch_sums.shape[2]
+        ds_new, dc_new = router_lib.bucket_sums(v, lab, n_buckets)
+        ds_old, dc_old = router_lib.bucket_sums(self.values[t, idx],
+                                                self.labels[t, idx],
+                                                n_buckets)
         return dataclasses.replace(
             self,
             values=self.values.at[t, idx].set(v),
@@ -271,6 +292,8 @@ class TenantStore:
             proj_packed=self.proj_packed.at[t, idx].set(
                 kernel_ops.pack_projection(proj, enc)),
             s_grid=self.s_grid.at[t, idx].set(_layout(v, self.cfgs[0])),
-            labels=self.labels.at[t, idx].set(labels.astype(jnp.int32)),
+            labels=self.labels.at[t, idx].set(lab),
+            sketch_sums=self.sketch_sums.at[t, 0].add(ds_new - ds_old),
+            sketch_counts=self.sketch_counts.at[t, 0].add(dc_new - dc_old),
             size=self.size.at[t].add(n),
         )

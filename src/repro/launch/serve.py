@@ -136,7 +136,9 @@ def serve_tenants(n_tenants: int, steps: int, batch: int, dim: int = 16,
 def serve(arch: str, smoke: bool, batch: int, steps: int, prompt_len: int,
           retrieval: bool = False, retrieval_mode: str = "two-phase",
           retrieval_backend: str = "auto", retrieval_k: int = 32,
-          retrieval_fused_min_rows: int | None = None):
+          retrieval_fused_min_rows: int | None = None,
+          retrieval_shards: int | None = None,
+          retrieval_nprobe: int | None = None):
     cfg = load_config(arch, smoke=smoke)
     rules = Rules(batch=(), fsdp=(), tensor=(), expert=())
     params = tfm.init(jax.random.PRNGKey(0), cfg)
@@ -158,6 +160,11 @@ def serve(arch: str, smoke: bool, batch: int, steps: int, prompt_len: int,
         # program once at write time (values + proj + s_grid); the decode
         # loop below jits against the store's constant layouts
         mstate = MemoryStore.create(mem_cfg).calibrate(vecs).write(vecs, toks)
+        if retrieval_shards:
+            # logical row partition; with --retrieval-nprobe < shards the
+            # decode loop routes through the per-shard sketch
+            # (repro/engine/router.py) instead of searching every shard
+            mstate = mstate.shard(n_shards=retrieval_shards)
         # fused-threshold override (e.g. a TPU-measured dense-vs-fused
         # crossover) applies engine-wide without a code change
         eng_kw = {} if retrieval_fused_min_rows is None else \
@@ -167,7 +174,8 @@ def serve(arch: str, smoke: bool, batch: int, steps: int, prompt_len: int,
                   if retrieval_mode in ("two-phase", "ideal") else None)
         mode = "ideal" if retrieval_mode == "ideal" else "two_phase"
         step_fn = jax.jit(steps_lib.make_serve_step_with_mcam(
-            cfg, rules, mem_cfg, engine=engine, k=retrieval_k, mode=mode))
+            cfg, rules, mem_cfg, engine=engine, k=retrieval_k, mode=mode,
+            nprobe=retrieval_nprobe))
 
     key = jax.random.PRNGKey(1)
     tok = jax.random.randint(key, (batch, 1), 0, cfg.vocab_size)
@@ -215,6 +223,16 @@ def main(argv=None):
                          "(engine.IDEAL_FUSED_MIN_ROWS default; applies "
                          "per shard-local block on sharded stores) -- a "
                          "perf knob, results are bit-identical either way")
+    ap.add_argument("--retrieval-shards", type=int, default=None,
+                    help="partition the serve store into this many logical "
+                         "row shards (MemoryStore.shard(n_shards=...)); "
+                         "prerequisite for --retrieval-nprobe routing")
+    ap.add_argument("--retrieval-nprobe", type=int, default=None,
+                    help="shards visited per query ('two-phase'/'ideal' on "
+                         "a partitioned store): < shards engages the "
+                         "phase-0 router sketch, bit-identical to brute "
+                         "force restricted to the visited shards; default "
+                         "searches every shard")
     ap.add_argument("--tenants", type=int, default=None,
                     help="run the standalone multi-tenant retrieval demo "
                          "with this many tenant stores instead of the "
@@ -227,7 +245,8 @@ def main(argv=None):
         return
     serve(args.arch, args.smoke, args.batch, args.steps, args.prompt_len,
           args.retrieval, args.retrieval_mode, args.retrieval_backend,
-          args.retrieval_k, args.retrieval_fused_min_rows)
+          args.retrieval_k, args.retrieval_fused_min_rows,
+          args.retrieval_shards, args.retrieval_nprobe)
 
 
 if __name__ == "__main__":

@@ -408,7 +408,8 @@ def make_serve_step(cfg: ModelConfig, rules: Rules):
 
 def make_serve_step_with_mcam(cfg: ModelConfig, rules: Rules, mem_cfg,
                               lam: float = 0.3, engine=None, k: int = 32,
-                              mode: str = "two_phase"):
+                              mode: str = "two_phase",
+                              nprobe: int | None = None):
     """Paper-integrated serving: the decoded hidden state queries the MCAM
     memory and the vote distribution over memory labels (token ids) mixes
     with the LM softmax -- a kNN-LM head served from the simulated NAND-CAM.
@@ -429,9 +430,13 @@ def make_serve_step_with_mcam(cfg: ModelConfig, rules: Rules, mem_cfg,
       'ideal'      top-k by exact digital distance only (votes == -dist on
                    valid candidates) -- the cheapest serving path; at
                    N >= engine.IDEAL_FUSED_MIN_ROWS it streams through the
-                   fused shortlist kernel instead of the dense matmul."""
+                   fused shortlist kernel instead of the dense matmul.
+    nprobe: shards visited per query when the store is partitioned
+    (`MemoryStore.shard`); nprobe < n_shards engages the phase-0 router
+    (repro/engine/router.py) -- bit-identical to brute force restricted to
+    the visited shards; None keeps the exhaustive search."""
     from repro.engine import SearchRequest
-    request = SearchRequest(mode=mode, k=k)
+    request = SearchRequest(mode=mode, k=k, nprobe=nprobe)
 
     def serve_step(params, caches, batch, pos, store):
         logits, caches, hidden = tfm.decode_step(

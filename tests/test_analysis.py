@@ -176,6 +176,8 @@ def test_registry_matrix_covers_every_route():
             assert inv in registry.INVARIANTS, inv
     search = [c for c in cells if c.entry == "engine.search"
               and "mode" in c.config]
+    routed = [c for c in search if "nprobe" in c.config]
+    search = [c for c in search if "nprobe" not in c.config]
     modes = {c.config["mode"] for c in search}
     backends = {c.config["backend"] for c in search}
     assert modes == {"full", "two_phase", "ideal"}
@@ -185,6 +187,15 @@ def test_registry_matrix_covers_every_route():
     # both sides of the fused dispatch are forced somewhere in the matrix
     fmrs = {c.config["fused_min_rows"] for c in search}
     assert {registry.FMR_FORCE_FUSED, registry.FMR_FORCE_DENSE} <= fmrs
+    # routed cells (PR 10): both phase-1 dispositions engaged, both packed
+    # sides, plus the nprobe == n_shards control with the tag-absent check
+    assert {c.config["backend"] for c in routed} >= {"mxu", "fused"}
+    assert {c.config["packed"] for c in routed} == {True, False}
+    assert any(c.config["nprobe"] == c.config["n_shards"] for c in routed)
+    assert any(c.config["nprobe"] < c.config["n_shards"] for c in routed)
+    for c in routed:
+        assert "router_tag_iff_engaged" in c.invariants, c.config
+        assert "no_collectives" in c.invariants, c.config
     writes = {c.config["path"] for c in cells
               if c.entry == "MemoryStore.write"}
     assert writes == {"unsharded", "one_shard", "multi_shard"}

@@ -107,3 +107,21 @@ def test_tenant_batch_under_wall_clock_ceiling():
     assert per_batch < 2.0, \
         f"64-tenant coalesced batch took {per_batch:.2f}s steady-state " \
         f"(ceiling 2.0s): per-tenant retrace or interpret blowup"
+
+
+def test_bench_router_dry_run_gate():
+    """`benchmarks.bench_router --dry-run` is the fast-job routing gate:
+    a shrunken recall/latency sweep whose routed-parity asserts (routed ==
+    brute force restricted to the visited shards, nprobe=S byte-identical
+    to the exhaustive program) run inside the subprocess. Rows must carry
+    the shared name,us,derived CSV shape with a recall= field."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_router", "--dry-run"],
+        capture_output=True, text=True, timeout=480, env=env, cwd=ROOT)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    lines = [l for l in proc.stdout.splitlines() if l.startswith("router/")]
+    assert any("exhaustive" in l for l in lines)
+    assert all("recall=" in l.split(",", 2)[2] for l in lines)
+    assert "dry-run OK" in proc.stdout

@@ -290,3 +290,81 @@ def test_tenant_server_coalesce_and_write():
         server.submit(t, q[i])
     server.flush()
     assert server.cache_entries() == entries    # write did not retrace
+
+
+def _mk_server(seed=7, n_tenants=3):
+    from repro.launch.serve import TenantServer
+    cfg = _cfg()
+    rng = np.random.default_rng(seed)
+    stores = []
+    for t in range(n_tenants):
+        mc = MemoryConfig(capacity=6, dim=DIM, search=cfg)
+        emb = jnp.asarray(rng.normal(size=(6, DIM)), jnp.float32)
+        stores.append(MemoryStore.create(mc).calibrate(emb).write(
+            emb, jnp.asarray(rng.integers(0, 4, size=(6,)))))
+    eng = RetrievalEngine(cfg)
+    req = SearchRequest(mode="two_phase", k=3)
+    return (TenantServer(eng, TenantStore.stack(stores), req), eng, req,
+            rng)
+
+
+def test_tenant_server_flush_empty_queue():
+    """flush() with nothing queued is a no-op: returns {} and never
+    touches the compiled search (no zero-row batch dispatch)."""
+    server, _, _, _ = _mk_server()
+    before = server.cache_entries()
+    assert server.flush() == {}
+    assert server.flush() == {}                # idempotent
+    assert server.cache_entries() == before
+
+
+def test_tenant_server_interleaved_write_between_submits():
+    """A ring write to a tenant BETWEEN submits to that same tenant:
+    flush() serves every queued query against the POST-write store (the
+    server holds one store; submit enqueues queries, not snapshots), and
+    the write does not retrace the compiled search."""
+    server, eng, req, rng = _mk_server(seed=8)
+    q = jnp.asarray(rng.normal(size=(3, DIM)), jnp.float32)
+    t0 = server.submit(1, q[0])
+    server.write(1, jnp.asarray(rng.normal(size=(2, DIM)), jnp.float32),
+                 jnp.array([8, 9]))
+    t1 = server.submit(1, q[1])
+    t2 = server.submit(0, q[2])
+    entries = server.cache_entries()
+    out = server.flush()
+    assert sorted(out) == [t0, t1, t2]
+    assert server.cache_entries() in (entries, entries + 1)  # shape only
+    direct = eng.search_tenants(server.tstore, q,
+                                jnp.asarray([1, 1, 0], jnp.int32), req)
+    for tk, row in ((t0, 0), (t1, 1), (t2, 2)):
+        for f in ("votes", "dist", "indices", "labels"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(out[tk], f)[0]),
+                np.asarray(getattr(direct, f)[row]), err_msg=f)
+
+
+def test_tenant_server_duplicate_tenant_ticket_ordering():
+    """Many queries for the SAME tenant in one flush: each ticket gets
+    ITS OWN query's row back (ticket == batch row), and the per-tenant
+    noise rank keys on queue order -- bit-identical to the direct
+    coalesced call with the same duplicate tenant_ids batch."""
+    server, eng, req, rng = _mk_server(seed=9)
+    q = jnp.asarray(rng.normal(size=(5, DIM)), jnp.float32)
+    tids = [2, 2, 0, 2, 2]                     # duplicates, interleaved
+    tickets = [server.submit(t, q[i]) for i, t in enumerate(tids)]
+    assert tickets == [0, 1, 2, 3, 4]          # tickets ARE queue order
+    out = server.flush()
+    assert sorted(out) == tickets
+    direct = eng.search_tenants(server.tstore, q,
+                                jnp.asarray(tids, jnp.int32), req)
+    for tk in tickets:
+        for f in ("votes", "dist", "indices", "labels"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(out[tk], f)[0]),
+                np.asarray(getattr(direct, f)[tk]), err_msg=f"{tk}:{f}")
+    # identical queries to the same tenant must still get DISTINCT noise
+    # ranks (queue position), hence independent result rows exist per
+    # ticket rather than one shared row object
+    same = [server.submit(2, q[0]) for _ in range(3)]
+    out2 = server.flush()
+    assert sorted(out2) == same and len(out2) == 3
